@@ -1,0 +1,43 @@
+"""Elastic re-planning latency (paper motivation (vi): respond to
+operational changes rapidly)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import Query, Resource
+from repro.core.resources import EDGE_BOX_2
+from repro.models import cnn_zoo
+from repro.runtime.elastic import ElasticController
+
+from .common import benchmark_cached, scission_for
+
+
+def run(quick: bool = True):
+    s = scission_for("4g")
+    graph = cnn_zoo.build("ResNet50")
+    benchmark_cached(s, "ResNet50")
+    ctl = ElasticController(s, "ResNet50", graph=graph)
+
+    rows = []
+    print("\n# Elastic re-planning (motivation vi)")
+    ev = ctl.on_resource_lost("edge1")
+    print(f"  drain edge1:   {ev.plan_time_s * 1e3:7.1f}ms -> "
+          f"{ev.config.describe()}")
+    rows.append(("elastic/drain", ev.plan_time_s * 1e6,
+                 round(ev.config.latency_s, 4)))
+
+    ev = ctl.on_resource_joined(Resource("edge3", "edge", EDGE_BOX_2,
+                                         speed_factor=2.0))
+    print(f"  join edge3:    {ev.plan_time_s * 1e3:7.1f}ms (+ incremental "
+          f"benchmark) -> {ev.config.describe()}")
+    rows.append(("elastic/join", ev.plan_time_s * 1e6,
+                 round(ev.config.latency_s, 4)))
+
+    t0 = time.perf_counter()
+    ctl.scission.query("ResNet50", Query(top_n=3))
+    warm = time.perf_counter() - t0
+    print(f"  warm re-query: {warm * 1e3:7.1f}ms "
+          f"({'<50ms PASS' if warm < 0.05 else 'FAIL'})")
+    rows.append(("elastic/warm_query", warm * 1e6, round(warm * 1e3, 3)))
+    return rows

@@ -1,0 +1,36 @@
+"""Table III reproduction: Scission benchmarking overhead per DNN per
+resource (seconds to run Steps 2-3)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import benchmark_model, TimingProvider
+from repro.models import cnn_zoo
+
+from .common import testbed
+
+
+def run(quick: bool = True):
+    names = (["MobileNetV2", "ResNet50", "VGG16"] if quick
+             else ["Xception", "VGG16", "VGG19", "ResNet50", "MobileNet",
+                   "MobileNetV2", "DenseNet121", "InceptionV3"])
+    resources = testbed()
+    rows = []
+    print("\n# Table III — benchmarking overhead (s) per resource")
+    hdr = f"{'model':<16}" + "".join(f"{r.name:>11}" for r in resources)
+    print(hdr)
+    for name in names:
+        g = cnn_zoo.build(name)
+        times = []
+        for r in resources:
+            t0 = time.perf_counter()
+            benchmark_model(g, [r], TimingProvider(), runs=5)
+            wall = time.perf_counter() - t0
+            # emulated overhead: measurement wall-time scaled to the tier
+            times.append(wall * r.speed_factor)
+        print(f"{name:<16}" + "".join(f"{t:>11.2f}" for t in times))
+        rows.append((f"overhead/{name}", times[-2] * 1e6,
+                     round(times[0] / times[-2], 2)))
+        # derived: device/cloud overhead ratio (paper: ~10x)
+    return rows

@@ -1,0 +1,120 @@
+"""Figures 6-15 + Table IV reproduction: Scission decisions under network
+conditions, input sizes, constraints, pipelines, and top-N rankings."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import Query, LATENCY
+
+from .common import benchmark_cached, scission_for, testbed
+
+
+def _best(scission, model, query=None, input_bytes=150e3):
+    res = scission.query(model, query or Query(top_n=1), input_bytes)
+    return res.best, res.query_time_s
+
+
+def scenario_network(quick=True):
+    """Figs 6-8: optimal partition vs network condition."""
+    print("\n# Figs 6-8 — lowest-latency partition per network condition")
+    rows = []
+    models = ["VGG19", "ResNet50", "MobileNetV2"] if not quick else \
+        ["ResNet50", "MobileNetV2"]
+    for net in ("3g", "4g", "wired"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m)
+            best, qt = _best(s, m)
+            print(f"  [{net}] {best.describe()}")
+            rows.append((f"net/{net}/{m}", qt * 1e6,
+                         round(best.latency_s, 4)))
+    return rows
+
+
+scenario_network._cache = {}
+
+
+def scenario_input_size(quick=True):
+    """Fig 9: partition sensitivity to input size (3G).  The paper's flip
+    happens at 170KB on its testbed; we report the flip threshold on ours
+    (the exact value depends on tier speeds — the sensitivity is the
+    claim)."""
+    print("\n# Fig 9 — input size sensitivity (ResNet50, 3G)")
+    s = scenario_network._cache.setdefault("3g", scission_for("3g"))
+    benchmark_cached(s, "ResNet50")
+    rows = []
+    for kb in (150, 170, 220, 300):
+        best, qt = _best(s, "ResNet50", input_bytes=kb * 1e3)
+        print(f"  [{kb}KB] {best.describe()}")
+        rows.append((f"input/{kb}kb", qt * 1e6, round(best.latency_s, 4)))
+    return rows
+
+
+def scenario_constraints(quick=True):
+    """Figs 10-11: entire resource pipeline must be used."""
+    print("\n# Figs 10-11 — constraint: device+edge+cloud must all be used")
+    rows = []
+    q = Query(top_n=1, must_use=("device", "edge1", "cloud_gpu"))
+    models = ["VGG19", "ResNet50"] if not quick else ["ResNet50"]
+    for net in ("3g", "4g"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m)
+            best, qt = _best(s, m, q)
+            print(f"  [{net}] {best.describe()}")
+            rows.append((f"cons/{net}/{m}", qt * 1e6,
+                         round(best.latency_s, 4)))
+    return rows
+
+
+def scenario_pipelines(quick=True):
+    """Figs 12-14: Edge(1) vs Edge(2) hardware sensitivity (wired)."""
+    print("\n# Figs 12-14 — edge hardware sensitivity (wired)")
+    rows = []
+    s = scenario_network._cache.setdefault("wired", scission_for("wired"))
+    models = ["InceptionV3", "DenseNet169"] if not quick else \
+        ["InceptionV3"]
+    for m in models:
+        benchmark_cached(s, m)
+        for edge in ("edge1", "edge2"):
+            other = "edge2" if edge == "edge1" else "edge1"
+            q = Query(top_n=1, must_use=(edge,), exclude=(other,))
+            best, qt = _best(s, m, q)
+            print(f"  [{edge}] {best.describe()}")
+            rows.append((f"pipe/{edge}/{m}", qt * 1e6,
+                         round(best.latency_s, 4)))
+    return rows
+
+
+def scenario_topn(quick=True):
+    """Table IV + Fig 15: top-3 per distributed pipeline (ResNet50)."""
+    print("\n# Table IV — top-3 partitions per pipeline (ResNet50, wired)")
+    s = scenario_network._cache.setdefault("wired", scission_for("wired"))
+    benchmark_cached(s, "ResNet50")
+    pipelines = {
+        "device-edge": (("device", "edge1"),),
+        "device-cloud": (("device", "cloud_gpu"),),
+        "edge-cloud": (("edge1", "cloud_gpu"),),
+        "device-edge-cloud": (("device", "edge1", "cloud_gpu"),),
+    }
+    rows = []
+    for name, pipes in pipelines.items():
+        res = s.query("ResNet50", Query(top_n=3, pipelines=pipes))
+        print(f"  [{name}]")
+        for cfg in res.configs:
+            print(f"    {cfg.describe()}")
+        if res.configs:
+            rows.append((f"topn/{name}", res.query_time_s * 1e6,
+                         round(res.configs[0].latency_s, 4)))
+    return rows
+
+
+def run(quick: bool = True):
+    rows = []
+    rows += scenario_network(quick)
+    rows += scenario_input_size(quick)
+    rows += scenario_constraints(quick)
+    rows += scenario_pipelines(quick)
+    rows += scenario_topn(quick)
+    return rows

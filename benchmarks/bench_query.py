@@ -1,0 +1,36 @@
+"""Query-engine latency (the paper's <50 ms claim, §II-B(vi))."""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import Query
+
+from .common import benchmark_cached, scission_for
+
+
+def run(quick: bool = True):
+    s = scission_for("4g")
+    benchmark_cached(s, "ResNet50")
+    queries = [
+        Query(top_n=3),
+        Query(top_n=3, must_use=("device", "edge1", "cloud")),
+        Query(top_n=3, exclude=("cloud", "cloud_gpu")),
+        Query(top_n=3, max_link_bytes={("edge1", "cloud"): 1_000_000}),
+        Query(top_n=3, max_resource_time={"device": 1.0}),
+        Query(top_n=3, pin={5: "edge1"}),
+    ]
+    s.query("ResNet50")   # warm cache (paper: queries run on cached data)
+    times = []
+    for q in queries * (1 if quick else 5):
+        t0 = time.perf_counter()
+        s.query("ResNet50", q)
+        times.append(time.perf_counter() - t0)
+    worst = max(times)
+    mean = statistics.fmean(times)
+    print(f"\n# Query engine: mean={mean * 1e3:.2f}ms "
+          f"worst={worst * 1e3:.2f}ms over {len(times)} queries "
+          f"(paper budget: 50ms) {'PASS' if worst < 0.05 else 'FAIL'}")
+    return [("query/mean", mean * 1e6, round(mean * 1e3, 3)),
+            ("query/worst", worst * 1e6, round(worst * 1e3, 3))]

@@ -1,0 +1,32 @@
+"""§Roofline report over the dry-run artifact (results/dryrun.json)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import analyse, table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run(quick: bool = True):
+    if not os.path.exists(RESULTS):
+        print("\n# Roofline: results/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun --all --out "
+              "results/dryrun.json` first")
+        return []
+    records = json.load(open(RESULTS))
+    print("\n# §Roofline — single-pod 16x16 (from the dry-run)")
+    print(table(records, "16x16"))
+    rows = []
+    for r in records:
+        if r["status"] != "OK" or r["mesh"] != "16x16":
+            continue
+        a = analyse(r)
+        dom_ms = max(a["t_compute_s"], a["t_memory_s"],
+                     a["t_collective_s"]) * 1e3
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", dom_ms * 1e3,
+                     round(a["roofline_fraction"], 4)))
+    return rows

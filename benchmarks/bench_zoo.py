@@ -1,0 +1,28 @@
+"""Table I reproduction: the 18 DNNs — layer counts, partition points,
+linear/branching classification."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import fuse_blocks
+from repro.models import cnn_zoo
+
+
+def run(quick: bool = True):
+    names = (["VGG16", "ResNet50", "MobileNet", "MobileNetV2",
+              "DenseNet121", "InceptionV3"] if quick
+             else sorted(cnn_zoo.ZOO))
+    rows = []
+    print("\n# Table I — model zoo (layers / partition points / type)")
+    print(f"{'model':<20}{'layers':>8}{'points':>8}{'type':>6}{'approx':>8}")
+    for name in names:
+        t0 = time.perf_counter()
+        g = cnn_zoo.build(name)
+        blocks = fuse_blocks(g)
+        dt = time.perf_counter() - t0
+        typ = "L" if name in cnn_zoo.LINEAR else "B"
+        print(f"{name:<20}{g.n_layers:>8}{len(blocks) - 1:>8}{typ:>6}"
+              f"{'~' if name in cnn_zoo.APPROX else '':>8}")
+        rows.append((f"zoo/{name}", dt * 1e6, len(blocks) - 1))
+    return rows

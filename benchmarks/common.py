@@ -1,0 +1,76 @@
+"""Shared setup for the paper-reproduction benchmarks.
+
+This host plays the paper's 'Cloud' box; the other tiers are emulated with
+speed factors calibrated so the device/cloud end-to-end latency ratios land
+in the regime of the paper's Figures 6-9 (the paper itself emulates the
+network conditions; we additionally emulate tier speeds since only one
+machine is available).  Benchmark DBs are cached on disk under
+``results/benchdb`` so repeated runs skip Steps 2-3, like the real tool.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core import (Link, Resource, Scission, TimingProvider,
+                        paper_network, THREE_G, FOUR_G, WIRED)
+from repro.core.resources import (CLOUD_VM, EDGE_BOX_1, EDGE_BOX_2, GTX_1070,
+                                  RPI4)
+from repro.models import cnn_zoo
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "benchdb")
+
+# Scaled-time emulation: this host's CNN compute is ~6x slower than the
+# paper's cloud box, so network times are scaled by the same factor to keep
+# the comm/compute ratio — and hence the paper's decision geometry — intact.
+TIME_SCALE = 6.0
+# tier speed ratios calibrated from the paper (Table III overheads and the
+# Fig 6-8 end-to-end latencies): device ~8x cloud, edges ~2x, GPU ~0.5x
+SPEED = {"device": 8.0, "edge1": 2.1, "edge2": 1.7, "cloud": 1.0,
+         "cloud_gpu": 0.5}
+
+
+def testbed() -> list[Resource]:
+    return [
+        Resource("device", "device", RPI4, speed_factor=SPEED["device"]),
+        Resource("edge1", "edge", EDGE_BOX_1, speed_factor=SPEED["edge1"]),
+        Resource("edge2", "edge", EDGE_BOX_2, speed_factor=SPEED["edge2"]),
+        Resource("cloud", "cloud", CLOUD_VM, speed_factor=SPEED["cloud"]),
+        Resource("cloud_gpu", "cloud", GTX_1070,
+                 speed_factor=SPEED["cloud_gpu"]),
+    ]
+
+
+def _scaled(link: Link) -> Link:
+    return Link(link.name, link.latency_s * TIME_SCALE,
+                link.bandwidth / TIME_SCALE)
+
+
+NETWORKS = {"3g": _scaled(THREE_G), "4g": _scaled(FOUR_G),
+            "wired": _scaled(WIRED)}
+
+
+def scission_for(network_name: str = "4g",
+                 resources: list[Resource] | None = None) -> Scission:
+    res = resources if resources is not None else testbed()
+    net = paper_network(NETWORKS[network_name],
+                        edges=tuple(r.name for r in res if r.tier == "edge"),
+                        clouds=tuple(r.name for r in res
+                                     if r.tier == "cloud"))
+    return Scission(resources=res, network=net, source="device",
+                    provider=TimingProvider(), runs=5)
+
+
+def benchmark_cached(scission: Scission, model_name: str):
+    """Steps 1-3 with a disk cache (the paper's offline benchmarking)."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"{model_name}.json")
+    if os.path.exists(path):
+        db = scission.restore(path)
+        if set(r.name for r in scission.resources) <= set(db.records):
+            return db
+    graph = cnn_zoo.build(model_name)
+    db = scission.benchmark(graph)
+    scission.save(model_name, path)
+    return db

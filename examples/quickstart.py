@@ -1,0 +1,43 @@
+"""Quickstart: Scission end-to-end on MobileNetV2 (the paper's Figure 8).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Benchmarks the model on the emulated device/edge/cloud testbed (Steps 1-3),
+then queries the optimal partition under 3G and 4G (Steps 4-6) — showing
+the paper's headline result: the optimum flips from device-native under 3G
+to cloud-native under 4G.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import Query
+from repro.models import cnn_zoo
+
+sys.path.insert(0, ".")
+from benchmarks.common import benchmark_cached, scission_for  # noqa: E402
+
+
+def main():
+    print("== Scission quickstart: MobileNetV2 on device/edge/cloud ==")
+    for net in ("3g", "4g"):
+        s = scission_for(net)
+        print(f"\n[{net}] benchmarking (Steps 1-3, cached after first run)…")
+        benchmark_cached(s, "MobileNetV2")
+        res = s.query("MobileNetV2", Query(top_n=3))
+        print(f"[{net}] top-3 partitions "
+              f"(query took {res.query_time_s * 1e3:.1f}ms):")
+        for cfg in res.configs:
+            print("   ", cfg.describe())
+
+    # a constrained query: keep data on the device+edge (privacy)
+    s = scission_for("4g")
+    benchmark_cached(s, "MobileNetV2")
+    res = s.query("MobileNetV2",
+                  Query(top_n=1, exclude=("cloud", "cloud_gpu")))
+    print("\n[4g, privacy: no cloud]", res.best.describe())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .ckpt import CheckpointManager, restore, save
+
+__all__ = ["CheckpointManager", "restore", "save"]

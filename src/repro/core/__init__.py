@@ -1,0 +1,29 @@
+"""Scission core: graph IR, benchmarking, partitioning, querying."""
+
+from .graph import Block, LayerGraph, LayerNode, fuse_blocks, linear_graph
+from .resources import (DeviceModel, Resource, paper_testbed, tpu_testbed,
+                        tpu_slice, TPU_V5E, TPU_V5E_PEAK_FLOPS,
+                        TPU_V5E_HBM_BW, TPU_V5E_ICI_BW)
+from .network import (Link, NetworkModel, THREE_G, FOUR_G, WIRED, EDGE_CLOUD,
+                      ICI, DCN, paper_network, tpu_network)
+from .bench import (BenchmarkDB, BlockBenchmark, TimingProvider,
+                    CompiledCostProvider, AnalyticProvider, benchmark_model)
+from .partition import (Segment, PartitionConfig, CostModel, Objective,
+                        LATENCY, TRANSFER, Constraints, PartitionLattice,
+                        enumerate_partitions, ordered_pipelines, rank)
+from .query import Query, QueryEngine, QueryResult
+from .planner import Scission
+
+__all__ = [
+    "Block", "LayerGraph", "LayerNode", "fuse_blocks", "linear_graph",
+    "DeviceModel", "Resource", "paper_testbed", "tpu_testbed", "tpu_slice",
+    "TPU_V5E", "TPU_V5E_PEAK_FLOPS", "TPU_V5E_HBM_BW", "TPU_V5E_ICI_BW",
+    "Link", "NetworkModel", "THREE_G", "FOUR_G", "WIRED", "EDGE_CLOUD",
+    "ICI", "DCN", "paper_network", "tpu_network",
+    "BenchmarkDB", "BlockBenchmark", "TimingProvider", "CompiledCostProvider",
+    "AnalyticProvider", "benchmark_model",
+    "Segment", "PartitionConfig", "CostModel", "Objective", "LATENCY",
+    "TRANSFER", "Constraints", "PartitionLattice", "enumerate_partitions",
+    "ordered_pipelines", "rank",
+    "Query", "QueryEngine", "QueryResult", "Scission",
+]

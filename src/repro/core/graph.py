@@ -1,0 +1,293 @@
+"""Layer-graph IR and partition-point analysis (Scission §II-A, §II-C Step 1-2).
+
+A model is represented as a DAG of :class:`LayerNode` s with a single input
+node and a single output node.  Scission's partitioning rules:
+
+* **linear models** — every inter-layer edge is a valid partition point,
+  except the edge leaving the input layer (the paper's ``N-2`` rule: a first
+  partition holding only the input layer would duplicate the input layer in
+  the second partition);
+* **branching models** — a cut may never split a parallel region, so layers
+  inside a branch are fused into a *block* and treated as a single entity
+  (ResNet50: 177 layers -> 23 partition points).
+
+Both rules reduce to one graph property: a valid partition point is a
+position in the topological order where exactly **one** edge crosses from the
+prefix to the suffix (a "bridge" of the layer DAG).  :func:`fuse_blocks`
+linearises the DAG into the block sequence that the benchmarking and
+partitioning stages (bench.py / partition.py) operate on.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+
+def _nbytes(sds: jax.ShapeDtypeStruct) -> int:
+    return int(math.prod(sds.shape)) * np.dtype(sds.dtype).itemsize
+
+
+@dataclass
+class LayerNode:
+    """One layer of a DNN.
+
+    ``apply`` consumes the outputs of the node's predecessors (a single array
+    for unary layers, a list for merge layers such as residual-add or
+    concat).  ``flops`` is an optional analytic estimate used by the
+    analytic benchmark provider; the timing and compiled-cost providers do
+    not need it.
+    """
+
+    name: str
+    kind: str
+    apply: Callable[..., Any] | None = None
+    flops: float = 0.0
+    param_bytes: int = 0
+    # Optional: compute FLOPs from (input specs, output spec) at trace time
+    # (layers whose cost depends on activation shapes, e.g. convs).
+    flops_fn: Callable[..., float] | None = None
+    # Filled in by LayerGraph.trace():
+    out_spec: jax.ShapeDtypeStruct | None = None
+
+    @property
+    def output_bytes(self) -> int:
+        if self.out_spec is None:
+            raise ValueError(f"layer {self.name!r} has not been traced")
+        return _nbytes(self.out_spec)
+
+
+class LayerGraph:
+    """A single-input single-output DAG of :class:`LayerNode` s.
+
+    Nodes must be added in a valid topological order (standard for layer
+    definitions).  Edges point from producer to consumer.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.nodes: list[LayerNode] = []
+        self.preds: list[list[int]] = []
+        self.input_spec: jax.ShapeDtypeStruct | None = None
+
+    # -- construction -----------------------------------------------------
+    def add(self, node: LayerNode, preds: Sequence[int] = ()) -> int:
+        idx = len(self.nodes)
+        for p in preds:
+            if not 0 <= p < idx:
+                raise ValueError(
+                    f"node {node.name!r}: predecessor {p} is not an earlier node"
+                )
+        self.nodes.append(node)
+        self.preds.append(list(preds))
+        return idx
+
+    def input(self, spec: jax.ShapeDtypeStruct, name: str = "input") -> int:
+        if self.nodes:
+            raise ValueError("input() must create the first node")
+        self.input_spec = spec
+        node = LayerNode(name=name, kind="input", apply=None)
+        node.out_spec = spec
+        return self.add(node)
+
+    # -- basic properties --------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def succs(self) -> list[list[int]]:
+        out: list[list[int]] = [[] for _ in self.nodes]
+        for i, ps in enumerate(self.preds):
+            for p in ps:
+                out[p].append(i)
+        return out
+
+    def validate(self) -> None:
+        if not self.nodes:
+            raise ValueError("empty graph")
+        succs = self.succs
+        sinks = [i for i, s in enumerate(succs) if not s]
+        if sinks != [len(self.nodes) - 1]:
+            raise ValueError(f"graph {self.name!r} must have exactly the last "
+                             f"node as its only sink; sinks={sinks}")
+        for i in range(1, len(self.nodes)):
+            if not self.preds[i]:
+                raise ValueError(f"node {i} ({self.nodes[i].name!r}) is an "
+                                 "orphan source; only node 0 may be a source")
+
+    # -- shape tracing -----------------------------------------------------
+    def trace(self) -> None:
+        """Fill every node's ``out_spec`` via ``jax.eval_shape`` (no FLOPs,
+        no allocation)."""
+        self.validate()
+
+        def run(x):
+            vals: list[Any] = [x]
+            for i in range(1, len(self.nodes)):
+                ins = [vals[p] for p in self.preds[i]]
+                fn = self.nodes[i].apply
+                if fn is None:
+                    raise ValueError(f"node {self.nodes[i].name!r} has no apply")
+                vals.append(fn(*ins))
+            return tuple(vals[1:])
+
+        outs = jax.eval_shape(run, self.input_spec)
+        for node, o in zip(self.nodes[1:], outs):
+            node.out_spec = o
+        for i, node in enumerate(self.nodes):
+            if node.flops_fn is not None:
+                ins = [self.nodes[p].out_spec for p in self.preds[i]]
+                node.flops = float(node.flops_fn(ins, node.out_spec))
+
+    # -- partition points --------------------------------------------------
+    def crossing_counts(self) -> list[int]:
+        """``counts[i]`` = number of **distinct producers** with edges from
+        nodes ``0..i`` to nodes ``i+1..``.
+
+        A cut is valid when exactly one tensor crosses it — i.e. all crossing
+        edges emanate from one producer.  A fork (a->b1, a->b2) therefore does
+        not invalidate the cut after ``a``: both edges carry ``a``'s output.
+        A residual skip (a->add bypassing b) keeps two producers open between
+        ``b`` and ``add``, so cuts inside the residual region are invalid —
+        exactly the paper's branch-fusion rule.
+        """
+        succs = self.succs
+        last_use = [max(s) if s else i for i, s in enumerate(succs)]
+        counts = []
+        open_prod = 0
+        closing_at: dict[int, int] = {}
+        for i in range(len(self.nodes)):
+            if last_use[i] > i:
+                open_prod += 1
+                closing_at[last_use[i]] = closing_at.get(last_use[i], 0) + 1
+            open_prod -= closing_at.pop(i, 0)
+            counts.append(open_prod)
+        return counts
+
+    def partition_points(self) -> list[int]:
+        """Valid partition points: positions ``i`` such that cutting between
+        node ``i`` and node ``i+1`` transfers exactly one tensor.
+
+        Position 0 (right after the input layer) is excluded per the paper's
+        ``N-2`` rule, as is the position after the final layer.  With a
+        single open producer at position ``i``, that producer is necessarily
+        node ``i`` itself (node ``i`` must feed someone later), so the block
+        ending at ``i`` owns the crossing tensor.
+        """
+        counts = self.crossing_counts()
+        return [i for i in range(1, len(self.nodes) - 1) if counts[i] == 1]
+
+
+@dataclass
+class Block:
+    """A fused unit: maximal run of layers between consecutive partition
+    points.  This is the entity Scission benchmarks and assigns to
+    resources."""
+
+    index: int
+    node_ids: list[int]
+    graph: LayerGraph = field(repr=False)
+
+    @property
+    def name(self) -> str:
+        ns = [self.graph.nodes[i].name for i in (self.node_ids[0], self.node_ids[-1])]
+        return ns[0] if len(self.node_ids) == 1 else f"{ns[0]}..{ns[1]}"
+
+    @property
+    def kinds(self) -> list[str]:
+        return [self.graph.nodes[i].kind for i in self.node_ids]
+
+    @property
+    def flops(self) -> float:
+        return sum(self.graph.nodes[i].flops for i in self.node_ids)
+
+    @property
+    def param_bytes(self) -> int:
+        return sum(self.graph.nodes[i].param_bytes for i in self.node_ids)
+
+    @property
+    def output_bytes(self) -> int:
+        """Bytes crossing the cut after this block (the paper's layer
+        'output data size')."""
+        return self.graph.nodes[self.node_ids[-1]].output_bytes
+
+    @property
+    def in_spec(self) -> jax.ShapeDtypeStruct:
+        first = self.node_ids[0]
+        preds = self.graph.preds[first]
+        # By construction a block's first node has exactly one predecessor
+        # (the single crossing edge of the preceding cut) unless it is the
+        # input node.
+        src = preds[0] if preds else first
+        return self.graph.nodes[src].out_spec  # type: ignore[return-value]
+
+    @property
+    def out_spec(self) -> jax.ShapeDtypeStruct:
+        return self.graph.nodes[self.node_ids[-1]].out_spec  # type: ignore[return-value]
+
+    def make_callable(self) -> Callable[[Any], Any]:
+        """Build the standalone sub-model for this block (paper Step 2: each
+        sub-model gets an input layer fed with the previous block's
+        output)."""
+        g = self.graph
+        ids = self.node_ids
+        id_set = set(ids)
+        first = ids[0]
+
+        def apply(x):
+            vals: dict[int, Any] = {}
+            entry = g.preds[first][0] if g.preds[first] else first
+            vals[entry] = x
+            for i in ids:
+                if i == first and not g.preds[first]:  # the input node itself
+                    vals[i] = x
+                    continue
+                ins = [vals[p] for p in g.preds[i]]
+                for p in g.preds[i]:
+                    if p not in id_set and p != entry:
+                        raise ValueError(
+                            f"block {self.index} node {g.nodes[i].name!r} reads "
+                            f"from outside the block (node {p}) — invalid cut")
+                vals[i] = g.nodes[i].apply(*ins)
+            return vals[ids[-1]]
+
+        return apply
+
+
+def fuse_blocks(graph: LayerGraph) -> list[Block]:
+    """Linearise ``graph`` into its block sequence (Scission Step 1-2).
+
+    Cuts are the valid partition points; each maximal segment between
+    consecutive cuts becomes one :class:`Block`.  The number of *inter-block*
+    positions, ``len(blocks) - 1``, equals the paper's "partition points"
+    column in Table I.
+    """
+    if graph.nodes and graph.nodes[-1].out_spec is None:
+        graph.trace()
+    points = graph.partition_points()
+    blocks: list[Block] = []
+    start = 0
+    for bi, p in enumerate([*points, len(graph.nodes) - 1]):
+        blocks.append(Block(index=bi, node_ids=list(range(start, p + 1)), graph=graph))
+        start = p + 1
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors for linear graphs (the common case for tests and
+# the LM-family architectures, whose residual stream is linear at block level)
+# ---------------------------------------------------------------------------
+
+def linear_graph(name: str, input_spec: jax.ShapeDtypeStruct,
+                 layers: Sequence[LayerNode]) -> LayerGraph:
+    g = LayerGraph(name)
+    prev = g.input(input_spec)
+    for node in layers:
+        prev = g.add(node, preds=[prev])
+    g.trace()
+    return g

@@ -1,0 +1,369 @@
+"""Partition configuration generation and ranking (Scission §II-C Steps 4-5).
+
+Two engines over the same cost model:
+
+* :func:`enumerate_partitions` — the paper's **exhaustive** enumeration of
+  every native and distributed configuration over every ordered resource
+  pipeline.  Kept as the validation oracle and for rich post-hoc queries.
+* :class:`PartitionLattice` — a **beyond-paper** Viterbi lattice over
+  (block, resource) states.  Exact under the paper's additive cost model
+  (assumptions 1 and 2 in §III-A), O(B·R²·2^R) with must-use masks, and
+  supports k-best (top-N) extraction.  This is what lets the same decision
+  procedure scale from the paper's 3-tier testbed to a 1000+-node fleet,
+  and what keeps re-planning (elastic runtime) inside the paper's 50 ms
+  query budget.
+
+Cost model (paper's two assumptions, validated in tests/test_bench.py):
+
+    latency(config) = comm(source -> r_1, input_bytes)
+                    + Σ_segments Σ_blocks time(r_i, b)
+                    + Σ_cuts     comm(r_i -> r_{i+1}, out_bytes[cut])
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from .bench import BenchmarkDB
+from .network import NetworkModel
+from .resources import Resource
+
+
+@dataclass(frozen=True)
+class Segment:
+    resource: str
+    start: int          # first block index (inclusive)
+    end: int            # last block index (inclusive)
+
+
+@dataclass
+class PartitionConfig:
+    """One ranked configuration (a row of the paper's Table IV)."""
+
+    model: str
+    segments: tuple[Segment, ...]
+    latency_s: float
+    compute_s: dict[str, float]
+    comm_s: float
+    transfer_bytes: float           # total inter-resource bytes (incl. input)
+    input_comm_s: float = 0.0
+
+    @property
+    def resources(self) -> tuple[str, ...]:
+        return tuple(s.resource for s in self.segments)
+
+    @property
+    def is_native(self) -> bool:
+        return len(self.segments) == 1
+
+    def describe(self) -> str:
+        parts = [f"{s.resource}: {s.start}-{s.end}" if s.start != s.end
+                 else f"{s.resource}: {s.start}" for s in self.segments]
+        return (f"[{self.model}] " + " | ".join(parts)
+                + f"  latency={self.latency_s * 1e3:.1f}ms"
+                + f" transfer={self.transfer_bytes / 1e6:.3f}MB")
+
+
+@dataclass
+class CostModel:
+    """Precomputed vectorised costs for one (model, resource set, network)."""
+
+    db: BenchmarkDB
+    resources: list[Resource]
+    network: NetworkModel
+    source: str                      # where the input data originates
+    input_bytes: float
+
+    times: np.ndarray = field(init=False)        # (R, B)
+    cum: np.ndarray = field(init=False)          # (R, B+1) prefix sums
+    out_bytes: np.ndarray = field(init=False)    # (B,)
+
+    def __post_init__(self):
+        names = [r.name for r in self.resources]
+        self.times = self.db.times_matrix(names)
+        self.cum = np.concatenate(
+            [np.zeros((len(names), 1)), np.cumsum(self.times, axis=1)], axis=1)
+        self.out_bytes = self.db.out_bytes_vector()
+        self._idx = {n: i for i, n in enumerate(names)}
+
+    @property
+    def n_blocks(self) -> int:
+        return self.db.n_blocks
+
+    def segment_time(self, resource: str, start: int, end: int) -> float:
+        i = self._idx[resource]
+        return float(self.cum[i, end + 1] - self.cum[i, start])
+
+    def comm(self, src: str, dst: str, nbytes: float) -> float:
+        return self.network.comm_time(src, dst, nbytes)
+
+    def evaluate(self, segments: Sequence[Segment],
+                 objective: "Objective | None" = None) -> PartitionConfig:
+        compute = {}
+        comm = 0.0
+        xfer = 0.0
+        first = segments[0].resource
+        input_comm = 0.0
+        if first != self.source:
+            input_comm = self.comm(self.source, first, self.input_bytes)
+            xfer += self.input_bytes
+        for k, seg in enumerate(segments):
+            compute[seg.resource] = compute.get(seg.resource, 0.0) + \
+                self.segment_time(seg.resource, seg.start, seg.end)
+            if k + 1 < len(segments):
+                nbytes = float(self.out_bytes[seg.end])
+                comm += self.comm(seg.resource, segments[k + 1].resource, nbytes)
+                xfer += nbytes
+        latency = input_comm + sum(compute.values()) + comm
+        return PartitionConfig(
+            model=self.db.model, segments=tuple(segments), latency_s=latency,
+            compute_s=compute, comm_s=comm, transfer_bytes=xfer,
+            input_comm_s=input_comm)
+
+
+@dataclass(frozen=True)
+class Objective:
+    """Ranking objective: minimise w_latency·latency + w_transfer·transfer.
+
+    The paper's Step 5 default is pure latency; Step 6 allows data-transfer
+    and combined objectives.
+    """
+
+    w_latency: float = 1.0
+    w_transfer_per_mb: float = 0.0
+
+    def score(self, cfg: PartitionConfig) -> float:
+        return (self.w_latency * cfg.latency_s
+                + self.w_transfer_per_mb * cfg.transfer_bytes / 1e6)
+
+
+LATENCY = Objective()
+TRANSFER = Objective(w_latency=0.0, w_transfer_per_mb=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive enumeration (paper-faithful Step 4)
+# ---------------------------------------------------------------------------
+
+def ordered_pipelines(resources: list[Resource]) -> list[tuple[str, ...]]:
+    """All ordered sub-pipelines: at most one resource per tier, data flows
+    device -> edge -> cloud (the paper's native + distributed configs)."""
+    tiers: dict[int, list[str]] = {}
+    for r in sorted(resources, key=lambda r: r.order):
+        tiers.setdefault(r.order, []).append(r.name)
+    levels = [tiers[k] for k in sorted(tiers)]
+    pipes: list[tuple[str, ...]] = []
+    for mask in itertools.product(*[[None, *lvl] for lvl in levels]):
+        pipe = tuple(m for m in mask if m is not None)
+        if pipe:
+            pipes.append(pipe)
+    return pipes
+
+
+def enumerate_partitions(cost: CostModel,
+                         pipelines: Iterable[tuple[str, ...]] | None = None,
+                         max_configs: int = 2_000_000
+                         ) -> list[PartitionConfig]:
+    """Every cut combination for every pipeline.  Exact but exponential in
+    pipeline length; the lattice below is the scalable path."""
+    B = cost.n_blocks
+    pipelines = list(pipelines) if pipelines is not None else \
+        ordered_pipelines(cost.resources)
+    configs: list[PartitionConfig] = []
+    n = 0
+    for pipe in pipelines:
+        k = len(pipe)
+        if k > B:
+            continue
+        for cuts in itertools.combinations(range(1, B), k - 1):
+            bounds = [0, *cuts, B]
+            segs = [Segment(pipe[i], bounds[i], bounds[i + 1] - 1)
+                    for i in range(k)]
+            configs.append(cost.evaluate(segs))
+            n += 1
+            if n > max_configs:
+                raise RuntimeError(
+                    f"exhaustive enumeration exceeded {max_configs} configs; "
+                    "use PartitionLattice")
+    return configs
+
+
+def rank(configs: list[PartitionConfig], objective: Objective = LATENCY,
+         top_n: int | None = None) -> list[PartitionConfig]:
+    out = sorted(configs, key=objective.score)
+    return out[:top_n] if top_n else out
+
+
+# ---------------------------------------------------------------------------
+# DP lattice (beyond-paper exact search + k-best)
+# ---------------------------------------------------------------------------
+
+class Constraints:
+    """Hard constraints folded into the lattice (Scission Step 6).
+
+    All are exact in the DP except ``max_resource_time`` which is
+    path-dependent and enforced by post-filtering k-best paths.
+    """
+
+    def __init__(self,
+                 must_use: Sequence[str] = (),
+                 exclude: Sequence[str] = (),
+                 pin: dict[int, str] | None = None,
+                 max_link_bytes: dict[tuple[str, str], float] | None = None,
+                 max_resource_time: dict[str, float] | None = None,
+                 min_blocks_on: dict[str, int] | None = None):
+        self.must_use = tuple(must_use)
+        self.exclude = frozenset(exclude)
+        self.pin = dict(pin or {})
+        self.max_link_bytes = dict(max_link_bytes or {})
+        self.max_resource_time = dict(max_resource_time or {})
+        self.min_blocks_on = dict(min_blocks_on or {})
+
+    def allowed(self, block: int, resource: str) -> bool:
+        if resource in self.exclude:
+            return False
+        pinned = self.pin.get(block)
+        return pinned is None or pinned == resource
+
+    def transition_allowed(self, src: str, dst: str, nbytes: float) -> bool:
+        limit = self.max_link_bytes.get((src, dst))
+        return limit is None or nbytes <= limit
+
+    def path_feasible(self, cfg: PartitionConfig) -> bool:
+        for res, tmax in self.max_resource_time.items():
+            if cfg.compute_s.get(res, 0.0) > tmax:
+                return False
+        for res, nmin in self.min_blocks_on.items():
+            got = sum(s.end - s.start + 1 for s in cfg.segments
+                      if s.resource == res)
+            if got < nmin:
+                return False
+        return True
+
+
+class PartitionLattice:
+    """Viterbi over (block, resource, used-mask) with k-best extraction.
+
+    Transitions: stay on the same resource (free) or hand off to a strictly
+    later tier (pay ``comm(out_bytes[block])``).  The used-mask tracks which
+    must-use resources have been visited so 'entire pipeline' style
+    constraints stay exact.
+    """
+
+    def __init__(self, cost: CostModel, constraints: Constraints | None = None,
+                 objective: Objective = LATENCY):
+        self.cost = cost
+        self.cons = constraints or Constraints()
+        self.obj = objective
+        self.res = [r for r in cost.resources if r.name not in self.cons.exclude]
+        self.names = [r.name for r in self.res]
+        self.order = {r.name: r.order for r in self.res}
+        self.must = [n for n in self.cons.must_use if n in self.names]
+        self.must_idx = {n: i for i, n in enumerate(self.must)}
+        self.full_mask = (1 << len(self.must)) - 1
+
+    def _mask_with(self, mask: int, resource: str) -> int:
+        i = self.must_idx.get(resource)
+        return mask | (1 << i) if i is not None else mask
+
+    def _step_cost(self, resource: str, block: int) -> float:
+        t = self.cost.segment_time(resource, block, block)
+        return self.obj.w_latency * t
+
+    def _comm_cost(self, src: str, dst: str, nbytes: float) -> float:
+        return (self.obj.w_latency * self.cost.comm(src, dst, nbytes)
+                + self.obj.w_transfer_per_mb * nbytes / 1e6)
+
+    def solve(self, top_n: int = 1) -> list[PartitionConfig]:
+        """k-best paths through the lattice; returns up to ``top_n`` feasible
+        configs ranked by the objective."""
+        B = self.cost.n_blocks
+        K = max(top_n * 4, top_n + 4)   # head-room for path-feasibility filter
+        # state -> list of (score, path) ; path = tuple of resource per block
+        # We keep paths as parent pointers to bound memory: entry =
+        # (score, resource, mask, parent_entry)
+        Entry = tuple  # (score, tie, resource, mask, parent)
+        frontier: dict[tuple[str, int], list[Entry]] = {}
+        tie = itertools.count()
+
+        def push(store: dict, key, entry, k=K):
+            lst = store.setdefault(key, [])
+            lst.append(entry)
+            lst.sort(key=lambda e: e[0])
+            del lst[k:]
+
+        for r in self.names:
+            if not self.cons.allowed(0, r):
+                continue
+            inp = 0.0
+            if r != self.cost.source:
+                if not self.cons.transition_allowed(self.cost.source, r,
+                                                    self.cost.input_bytes):
+                    continue
+                inp = self._comm_cost(self.cost.source, r, self.cost.input_bytes)
+            score = inp + self._step_cost(r, 0)
+            push(frontier, (r, self._mask_with(0, r)),
+                 (score, next(tie), r, self._mask_with(0, r), None))
+
+        for b in range(1, B):
+            nxt: dict[tuple[str, int], list[Entry]] = {}
+            nbytes = float(self.cost.out_bytes[b - 1])
+            for (r, mask), entries in frontier.items():
+                for e in entries:
+                    # stay
+                    if self.cons.allowed(b, r):
+                        push(nxt, (r, mask),
+                             (e[0] + self._step_cost(r, b), next(tie), r, mask, e))
+                    # hand off to a later tier
+                    for r2 in self.names:
+                        if self.order[r2] <= self.order[r] or \
+                                not self.cons.allowed(b, r2) or \
+                                not self.cons.transition_allowed(r, r2, nbytes):
+                            continue
+                        m2 = self._mask_with(mask, r2)
+                        sc = e[0] + self._comm_cost(r, r2, nbytes) \
+                            + self._step_cost(r2, b)
+                        push(nxt, (r2, m2), (sc, next(tie), r2, m2, e))
+            frontier = nxt
+
+        finals: list[Entry] = []
+        for (r, mask), entries in frontier.items():
+            if mask != self.full_mask:
+                continue
+            finals.extend(entries)
+        finals.sort(key=lambda e: e[0])
+
+        out: list[PartitionConfig] = []
+        seen: set[tuple[Segment, ...]] = set()
+        for e in finals:
+            segs = self._reconstruct(e)
+            if segs in seen:
+                continue
+            seen.add(segs)
+            cfg = self.cost.evaluate(segs)
+            if self.cons.path_feasible(cfg):
+                out.append(cfg)
+            if len(out) >= top_n:
+                break
+        return out
+
+    @staticmethod
+    def _reconstruct(entry) -> tuple[Segment, ...]:
+        path: list[str] = []
+        e = entry
+        while e is not None:
+            path.append(e[2])
+            e = e[4]
+        path.reverse()
+        segs: list[Segment] = []
+        start = 0
+        for i in range(1, len(path) + 1):
+            if i == len(path) or path[i] != path[start]:
+                segs.append(Segment(path[start], start, i - 1))
+                start = i
+        return tuple(segs)

@@ -1,0 +1,105 @@
+"""Scission facade — the six-step methodology end to end (paper Figure 5).
+
+    scission = Scission(resources, network, source="device")
+    scission.benchmark(graph)                       # Steps 1-3 (offline)
+    result = scission.query(graph.name, Query(...)) # Steps 4-6 (<50 ms)
+
+Benchmark databases persist to disk so Steps 1-3 run once per
+(model, resource set) and every later query is an in-memory ranking pass —
+this is the property the elastic runtime (runtime/elastic.py) relies on to
+re-plan within the paper's query budget when a resource joins or leaves.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+from .bench import (BenchmarkDB, BenchmarkProvider, TimingProvider,
+                    benchmark_model)
+from .graph import LayerGraph, fuse_blocks
+from .network import NetworkModel
+from .partition import PartitionConfig
+from .query import Query, QueryEngine, QueryResult
+from .resources import Resource
+
+
+@dataclass
+class Scission:
+    resources: list[Resource]
+    network: NetworkModel
+    source: str
+    provider: BenchmarkProvider = field(default_factory=TimingProvider)
+    runs: int = 5
+
+    def __post_init__(self):
+        self._dbs: dict[str, BenchmarkDB] = {}
+        self._engines: dict[tuple[str, float], QueryEngine] = {}
+
+    # -- Steps 1-3 -----------------------------------------------------------
+    def benchmark(self, graph: LayerGraph) -> BenchmarkDB:
+        db = benchmark_model(graph, self.resources, self.provider,
+                             runs=self.runs)
+        self._dbs[graph.name] = db
+        return db
+
+    def benchmark_resource(self, graph: LayerGraph, resource) -> BenchmarkDB:
+        """Incremental Step 3 for one newly-joined resource: existing
+        records are reused, only the new resource's blocks are measured."""
+        new = benchmark_model(graph, [resource], self.provider,
+                              runs=self.runs)
+        db = self._dbs.get(graph.name)
+        if db is None:
+            self._dbs[graph.name] = new
+            return new
+        db.records[resource.name] = new.records[resource.name]
+        self._engines = {k: v for k, v in self._engines.items()
+                         if k[0] != graph.name}
+        return db
+
+    def load(self, db: BenchmarkDB) -> None:
+        self._dbs[db.model] = db
+
+    def save(self, model: str, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self._dbs[model].to_json())
+
+    def restore(self, path: str) -> BenchmarkDB:
+        with open(path) as f:
+            db = BenchmarkDB.from_json(f.read())
+        self._dbs[db.model] = db
+        return db
+
+    # -- Steps 4-6 -----------------------------------------------------------
+    def engine(self, model: str, input_bytes: float) -> QueryEngine:
+        key = (model, float(input_bytes))
+        if key not in self._engines:
+            self._engines[key] = QueryEngine(
+                self._dbs[model], self.resources, self.network,
+                source=self.source, input_bytes=input_bytes)
+        return self._engines[key]
+
+    def query(self, model: str, query: Query | None = None,
+              input_bytes: float = 150e3) -> QueryResult:
+        """150 KB default input — the paper's standard image size."""
+        return self.engine(model, input_bytes).run(query)
+
+    def best(self, model: str, input_bytes: float = 150e3) -> PartitionConfig:
+        return self.query(model, Query(top_n=1), input_bytes).best
+
+    # -- operational changes (motivation (vi), elastic runtime hook) ---------
+    def with_resources(self, resources: list[Resource]) -> "Scission":
+        """Re-plan with a changed resource set (maintenance, failure, join)
+        WITHOUT re-benchmarking: the per-(block, resource) records of any
+        resource still present are reused."""
+        s = Scission(resources=resources, network=self.network,
+                     source=self.source, provider=self.provider,
+                     runs=self.runs)
+        names = {r.name for r in resources}
+        for model, db in self._dbs.items():
+            kept = {r: recs for r, recs in db.records.items() if r in names}
+            if kept and all(n in db.records for n in names):
+                ndb = BenchmarkDB(model=db.model, n_blocks=db.n_blocks)
+                ndb.records = kept
+                s._dbs[model] = ndb
+        return s

@@ -1,0 +1,137 @@
+"""Query engine (Scission §II-C Step 6).
+
+Queries run against a cached :class:`BenchmarkDB` — never against live
+hardware — which is what keeps the paper's "<50 ms per query" budget.  Two
+execution strategies, chosen automatically:
+
+* small search spaces (≤ ``EXHAUSTIVE_LIMIT`` configs): vectorised
+  exhaustive enumeration + filter (the paper's own strategy);
+* large spaces: the k-best :class:`PartitionLattice`.
+
+Both return identically-shaped ranked :class:`PartitionConfig` lists, so the
+paper's experiments and the 1000-node fleet path share one API.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+from .bench import BenchmarkDB
+from .network import NetworkModel
+from .partition import (Constraints, CostModel, Objective, LATENCY,
+                        PartitionConfig, PartitionLattice,
+                        enumerate_partitions, ordered_pipelines, rank)
+from .resources import Resource
+
+EXHAUSTIVE_LIMIT = 200_000
+
+
+@dataclass
+class Query:
+    """A user query (paper Step 6 examples map 1:1 onto these fields)."""
+
+    objective: Objective = LATENCY
+    top_n: int = 3
+    # constraints
+    must_use: tuple[str, ...] = ()
+    exclude: tuple[str, ...] = ()
+    pin: dict[int, str] = field(default_factory=dict)
+    max_link_bytes: dict[tuple[str, str], float] = field(default_factory=dict)
+    max_resource_time: dict[str, float] = field(default_factory=dict)
+    min_blocks_on: dict[str, int] = field(default_factory=dict)
+    pipelines: tuple[tuple[str, ...], ...] | None = None   # restrict pipelines
+
+    def constraints(self) -> Constraints:
+        return Constraints(must_use=self.must_use, exclude=self.exclude,
+                           pin=self.pin, max_link_bytes=self.max_link_bytes,
+                           max_resource_time=self.max_resource_time,
+                           min_blocks_on=self.min_blocks_on)
+
+
+@dataclass
+class QueryResult:
+    configs: list[PartitionConfig]
+    query_time_s: float
+    strategy: str
+
+    @property
+    def best(self) -> PartitionConfig:
+        return self.configs[0]
+
+
+class QueryEngine:
+    """Step 6 over one (model benchmark DB, resource set, network)."""
+
+    def __init__(self, db: BenchmarkDB, resources: list[Resource],
+                 network: NetworkModel, source: str, input_bytes: float):
+        self.cost = CostModel(db=db, resources=resources, network=network,
+                              source=source, input_bytes=input_bytes)
+        self.resources = resources
+        self._exhaustive_cache: list[PartitionConfig] | None = None
+
+    # -- sizing -------------------------------------------------------------
+    def _search_space(self) -> int:
+        B = self.cost.n_blocks
+        total = 0
+        for pipe in ordered_pipelines(self.resources):
+            k = len(pipe)
+            if k <= B:
+                total += math.comb(B - 1, k - 1)
+        return total
+
+    # -- execution ----------------------------------------------------------
+    def run(self, query: Query | None = None) -> QueryResult:
+        query = query or Query()
+        t0 = time.perf_counter()
+        cons = query.constraints()
+        space = self._search_space()
+        if space <= EXHAUSTIVE_LIMIT:
+            configs = self._run_exhaustive(query, cons)
+            strategy = "exhaustive"
+        else:
+            lat = PartitionLattice(self.cost, cons, query.objective)
+            configs = lat.solve(top_n=query.top_n)
+            strategy = "lattice"
+        return QueryResult(configs=configs,
+                           query_time_s=time.perf_counter() - t0,
+                           strategy=strategy)
+
+    def _run_exhaustive(self, query: Query,
+                        cons: Constraints) -> list[PartitionConfig]:
+        if self._exhaustive_cache is None:
+            self._exhaustive_cache = enumerate_partitions(self.cost)
+        out = []
+        for cfg in self._exhaustive_cache:
+            if query.pipelines is not None and \
+                    cfg.resources not in query.pipelines:
+                continue
+            if not self._config_satisfies(cfg, cons):
+                continue
+            out.append(cfg)
+        return rank(out, query.objective, query.top_n)
+
+    def _config_satisfies(self, cfg: PartitionConfig,
+                          cons: Constraints) -> bool:
+        used = set(cfg.resources)
+        if any(m not in used for m in cons.must_use):
+            return False
+        if used & cons.exclude:
+            return False
+        for blk, res in cons.pin.items():
+            ok = any(s.resource == res and s.start <= blk <= s.end
+                     for s in cfg.segments)
+            if not ok:
+                return False
+        for i, seg in enumerate(cfg.segments[:-1]):
+            nxt = cfg.segments[i + 1]
+            nbytes = float(self.cost.out_bytes[seg.end])
+            if not cons.transition_allowed(seg.resource, nxt.resource, nbytes):
+                return False
+        if cfg.segments[0].resource != self.cost.source:
+            if not cons.transition_allowed(self.cost.source,
+                                           cfg.segments[0].resource,
+                                           self.cost.input_bytes):
+                return False
+        return cons.path_feasible(cfg)

@@ -1,0 +1,3 @@
+from .ops import decode_attention, flash_attention, ssd_scan
+
+__all__ = ["decode_attention", "flash_attention", "ssd_scan"]

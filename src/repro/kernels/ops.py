@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests/examples; on TPU backends the kernels compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .decode_attention import decode_attention as _decode
+from .ssd_scan import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def decode_attention(q, k, v, lengths, *, softcap=None, block_k=256,
+                     interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _decode(q, k, v, lengths, softcap=softcap, block_k=block_k,
+                   interpret=interpret)
+
+
+def ssd_scan(x, log_a, b, c, *, chunk=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd(x, log_a, b, c, chunk=chunk, interpret=interpret)

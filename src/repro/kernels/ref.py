@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are deliberately naive (full score materialisation, direct scans) —
+they define correctness, not performance.  Kernel tests sweep shapes/dtypes
+and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, Hk, hd) with H % Hk == 0."""
+    B, Sq, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hk, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, softcap=None):
+    """Single-token decode over a KV cache.
+
+    q: (B, H, hd); k, v: (B, Smax, Hk, hd); lengths: (B,) valid entries.
+    """
+    B, H, hd = q.shape
+    Smax, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, Hk, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.arange(Smax)[None, :] < lengths[:, None]      # (B, Smax)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x, log_a, b, c, initial_state=None):
+    """Sequential (step-by-step) SSD reference.
+
+    x: (B, S, H, P); log_a: (B, S, H); b, c: (B, S, H, N).
+    Returns (y: (B, S, H, P), final_state: (B, H, N, P)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = log_a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    state = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def step(st, t):
+        xt, at, bt, ct = t
+        st = st * jnp.exp(at)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, st)
+        return st, y
+
+    state, ys = jax.lax.scan(
+        step, state,
+        (xf.transpose(1, 0, 2, 3), af.transpose(1, 0, 2),
+         bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state

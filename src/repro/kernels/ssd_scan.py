@@ -1,0 +1,104 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the GPU selective-scan (DESIGN.md §6): instead of a
+warp-parallel recurrence, the sequence is tiled into chunks of length L.
+The grid walks (batch, head) in parallel and chunks *sequentially*; per
+step the kernel computes the dense intra-chunk part with three MXU matmuls
+((L×N)·(N×L) decay-masked scores, (L×L)·(L×P) output, (N×L)·(L×P) chunk
+state) and carries the (N×P) running state in VMEM scratch across chunk
+steps — the cross-chunk recurrence costs one rank-1 update per chunk
+instead of S sequential steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_scr, *,
+            L: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    la = a_ref[0, :, 0].astype(jnp.float32)          # (L,)
+    b = b_ref[0, :, 0, :].astype(jnp.float32)        # (L, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)        # (L, N)
+
+    seg = jnp.cumsum(la)                             # (L,)
+    total = seg[-1]
+
+    # intra-chunk: scores_ij = c_i·b_j * exp(seg_i - seg_j) for j <= i
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    diff = seg[:, None] - seg[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)
+    y = jax.lax.dot_general(scores * decay, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += exp(seg_i) * c_i · state_in
+    state_in = state_scr[...]                        # (N, P)
+    y += jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        c, state_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: state = state * exp(total) + Σ_j exp(total - seg_j) b_j x_jᵀ
+    w = jnp.exp(total - seg)                         # (L,)
+    state_scr[...] = state_in * jnp.exp(total) + jax.lax.dot_general(
+        b * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        fin_ref[0, 0] = state_scr[...].astype(fin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, log_a, b, c, *, chunk=128, interpret=False):
+    """x: (B, S, H, P); log_a: (B, S, H); b, c: (B, S, H, N).
+
+    Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    grid = (B, H, nc)
+    kernel = functools.partial(_kernel, L=L, nc=nc)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, h, ic: (bi, ic, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda bi, h, ic: (bi, ic, h)),
+            pl.BlockSpec((1, L, 1, N), lambda bi, h, ic: (bi, ic, h, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda bi, h, ic: (bi, ic, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, h, ic: (bi, ic, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bi, h, ic: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, log_a, b, c)
+    return y, fin

@@ -1,0 +1,99 @@
+"""Roofline analysis over the dry-run results (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` on this backend reports *per-device* FLOPs/bytes of the
+SPMD-partitioned module, and the collective bytes are parsed per-device from
+the partitioned HLO, so each term is simply value / peak — already per chip.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    python -m repro.launch.roofline --in results/dryrun.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30     # v5e
+
+
+def analyse(rec: dict) -> dict:
+    if rec["status"] != "OK":
+        return dict(rec)
+    chips = rec["n_devices"]
+    t_compute = rec["hlo_flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["hlo_bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_fl = rec["model_flops_total"]
+    hlo_total = rec["hlo_flops_per_device"] * chips
+    useful = model_fl / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful-FLOPs time over the bound set by the
+    # dominant term (1.0 == the dominant resource is saturated by useful work)
+    t_useful = model_fl / (chips * PEAK_FLOPS)
+    frac = t_useful / bound if bound else 0.0
+    mem = rec.get("memory", {})
+    fits = (mem.get("temp_bytes", 0) + mem.get("argument_bytes", 0)
+            ) <= HBM_PER_CHIP
+    out = dict(rec)
+    out.update(
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        dominant=dominant, useful_flops_ratio=useful,
+        roofline_fraction=frac, fits_hbm=fits,
+        hbm_gib=round((mem.get("temp_bytes", 0)
+                       + mem.get("argument_bytes", 0)) / 2**30, 2),
+    )
+    return out
+
+
+def table(records: list[dict], mesh: str = "16x16") -> str:
+    rows = []
+    hdr = (f"{'arch':<22}{'shape':<13}{'comp(ms)':>9}{'mem(ms)':>9}"
+           f"{'coll(ms)':>9} {'dom':<5}{'useful':>7}{'roofl%':>7}"
+           f"{'HBM GiB':>9}{'fits':>6}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "SKIP":
+            rows.append(f"{r['arch']:<22}{r['shape']:<13}"
+                        f"{'SKIP: ' + r['reason'][:58]}")
+            continue
+        if r["status"] != "OK":
+            rows.append(f"{r['arch']:<22}{r['shape']:<13}FAIL")
+            continue
+        a = analyse(r)
+        rows.append(
+            f"{r['arch']:<22}{r['shape']:<13}"
+            f"{a['t_compute_s'] * 1e3:>9.2f}{a['t_memory_s'] * 1e3:>9.2f}"
+            f"{a['t_collective_s'] * 1e3:>9.2f} {a['dominant'][:4]:<5}"
+            f"{a['useful_flops_ratio']:>7.2f}"
+            f"{a['roofline_fraction'] * 100:>7.1f}"
+            f"{a['hbm_gib']:>9.2f}{'y' if a['fits_hbm'] else 'N':>6}")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    records = json.load(open(args.inp))
+    print(table(records, args.mesh))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([analyse(r) for r in records], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .lm import DecoderLM
+from .encdec import EncDecLM
+from .registry import build_model, config_names, get_config, register
+
+__all__ = ["DecoderLM", "EncDecLM", "build_model", "config_names",
+           "get_config", "register"]

@@ -1,0 +1,66 @@
+"""Adapter: DecoderLM -> Scission LayerGraph.
+
+Makes the paper's partitioning a first-class feature for the transformer
+zoo: each scan group becomes one graph node (Scission's block), embedding
+and unembedding are the terminal nodes, and the residual stream is the
+single crossing tensor — so every group boundary is a valid partition
+point, exactly like the paper's linear DNNs.
+
+Used by examples/partition_and_serve.py to split a small LM across the
+emulated device/edge/cloud tiers and execute it with PipelineExecutor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import LayerGraph, LayerNode
+from repro.models import layers as L
+from repro.models.lm import DecoderLM, _norm
+
+
+def lm_to_graph(model: DecoderLM, params, *, batch: int, seq_len: int
+                ) -> LayerGraph:
+    cfg = model.cfg
+    g = LayerGraph(cfg.name)
+    prev = g.input(jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+                   name="tokens")
+
+    def embed_fn(tokens):
+        return model._embed_inputs(params, tokens)
+
+    d = cfg.d_model
+    prev = g.add(LayerNode("embed", "embed", apply=embed_fn,
+                           flops=0.0,
+                           param_bytes=cfg.vocab * d * 2), [prev])
+
+    positions = jnp.arange(seq_len, dtype=jnp.int32)[None, :]
+    shared = params.get("shared_block")
+    for gi in range(cfg.n_groups):
+        pg = jax.tree.map(lambda a, gi=gi: a[gi], params["layers"])
+
+        def group_fn(x, pg=pg):
+            y, _, _ = model._apply_group(pg, shared, x, None,
+                                         positions=positions,
+                                         cache_len=None, mode="train")
+            return y
+
+        pbytes = sum(int(jnp.size(a)) * a.dtype.itemsize
+                     for a in jax.tree.leaves(pg))
+        per_tok_flops = 2.0 * pbytes / 2   # ~2 flops per bf16 param weight
+        g.add(LayerNode(f"group{gi}", "block", apply=group_fn,
+                        flops=per_tok_flops * batch * seq_len,
+                        param_bytes=pbytes), [prev])
+        prev = len(g.nodes) - 1
+
+    def head_fn(x):
+        normf = _norm(cfg)
+        h = normf(params["final_norm"], x[:, -1:])
+        return L.unembed(params["embed"], h, softcap=cfg.final_softcap)
+
+    g.add(LayerNode("head", "unembed", apply=head_fn,
+                    flops=2.0 * cfg.vocab * d * batch,
+                    param_bytes=0), [prev])
+    g.trace()
+    return g

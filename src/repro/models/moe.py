@@ -1,0 +1,227 @@
+"""Mixture-of-Experts: top-k token-choice routing with grouped, capacity-based
+one-hot dispatch (GShard / MaxText style).
+
+TPU-native formulation: dispatch and combine are dense einsums against a
+(group, tokens, E, C) one-hot tensor, so expert compute is plain MXU matmuls
+and the expert-sharded dim lowers to an all-to-all — no scatter/gather
+kernels.  Tokens are processed in fixed-size *groups* with per-group expert
+capacity so the dispatch tensor stays O(g·E·C) regardless of sequence length
+(required for the 32k-prefill cells).
+
+Experts are padded to a multiple of the TP axis (e.g. 60 -> 64) so the
+expert dim shards evenly; padded experts are masked out of routing.
+
+Covers the two assigned MoE architectures:
+* qwen2-moe-a2.7b — 60 routed top-4 + fused shared expert + sigmoid gate;
+* granite-moe-3b  — 40 routed top-8, no shared expert.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from .layers import Pm, mlp, mlp_spec
+
+
+def pad_experts(n_experts: int, multiple: int = 16) -> int:
+    return ((n_experts + multiple - 1) // multiple) * multiple
+
+
+def moe_spec(d_model: int, d_expert: int, n_experts: int,
+             n_shared: int = 0, d_shared: int = 0,
+             pad_to: int = 16) -> dict:
+    E = pad_experts(n_experts, pad_to)
+    spec = {
+        "router": Pm((d_model, E), ("embed", "experts")),
+        "w_gate": Pm((E, d_model, d_expert), ("experts", "embed", "ff")),
+        "w_up": Pm((E, d_model, d_expert), ("experts", "embed", "ff")),
+        "w_down": Pm((E, d_expert, d_model), ("experts", "ff", "embed")),
+    }
+    if n_shared:
+        spec["shared"] = mlp_spec(d_model, d_shared, gated=True)
+        spec["shared_gate"] = Pm((d_model, 1), ("embed", None), init="zeros")
+    return spec
+
+
+def _capacity(g: int, n_experts: int, top_k: int, factor: float) -> int:
+    cap = int(math.ceil(g * top_k / n_experts * factor))
+    return max(8, ((cap + 7) // 8) * 8)   # 8-align for the MXU
+
+
+def moe(p, x, *, top_k: int, n_experts: int, capacity_factor: float = 1.25,
+        activation: str = "silu", group_size: int = 512,
+        impl: str = "sort"):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    ``impl="onehot"`` is the GShard-faithful einsum dispatch (kept as the
+    oracle; its (n,g,E,C) combine tensor costs O(T·g·k) HBM and FLOPs).
+    ``impl="sort"`` routes with an argsort over expert ids + gather/scatter
+    of *indices only*, so every large tensor is O(T·k·D) — the beyond-paper
+    optimisation recorded in EXPERIMENTS.md §Perf (same routing semantics:
+    token-choice top-k with per-group capacity, overflow dropped).
+    """
+    if impl == "sort":
+        return moe_sort(p, x, top_k=top_k, n_experts=n_experts,
+                        capacity_factor=capacity_factor,
+                        activation=activation, group_size=group_size)
+    B, S, D = x.shape
+    E = p["router"].shape[1]             # padded expert count
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    n = T // g
+    xt = x.reshape(n, g, D)
+    xt = constrain(xt, "act_batch", None, None)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if n_experts < E:                    # mask padded experts out of routing
+        logits = logits - jnp.where(jnp.arange(E) < n_experts, 0.0, 1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (n, g, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = _capacity(g, E, top_k, capacity_factor)
+    # Position of each routing slot in its expert queue.  Slots are ordered
+    # (token-major, then k) within the group.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (n, g, k, E)
+    flat = onehot.reshape(n, g * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # 0-based queue pos
+    pos = pos.reshape(n, g, top_k, E)
+
+    combine = jnp.zeros((n, g, E, C), jnp.float32)
+    for k in range(top_k):               # small static loop bounds peak memory
+        oh_k = onehot[:, :, k, :]
+        pos_k = pos[:, :, k, :]
+        keep = (pos_k < C) & (oh_k > 0)
+        slot = jax.nn.one_hot(pos_k.astype(jnp.int32), C, dtype=jnp.float32)
+        slot = slot * keep[..., None]
+        combine = combine + slot * gate_vals[:, :, k, None, None]
+    dispatch = (combine > 0).astype(x.dtype)                 # (n, g, E, C)
+
+    # aux load-balancing loss (Switch): E * Σ_e f_e p_e, over real experts
+    density = jnp.mean(onehot[..., :n_experts].sum(axis=2), axis=(0, 1))
+    p_mean = jnp.mean(probs[..., :n_experts], axis=(0, 1))
+    aux = n_experts * jnp.sum(density * p_mean)
+
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xt)          # (n, E, C, D)
+    xe = constrain(xe, None, "act_experts", None, None)
+    h = jnp.einsum("necd,edf->necf", xe, p["w_up"])
+    gt = jnp.einsum("necd,edf->necf", xe, p["w_gate"])
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(gt) * h
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    ye = constrain(ye, None, "act_experts", None, None)
+    yt = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)
+
+    if "shared" in p:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("ngd,do->ngo", xt.astype(jnp.float32),
+                       p["shared_gate"].astype(jnp.float32)))
+        ys = mlp(p["shared"], xt, activation=activation)
+        yt = yt + (sg * ys.astype(jnp.float32)).astype(yt.dtype)
+
+    y = yt.reshape(B, S, D)
+    return constrain(y, "act_batch", "act_seq", None), aux
+
+
+def moe_sort(p, x, *, top_k: int, n_experts: int,
+             capacity_factor: float = 1.25, activation: str = "silu",
+             group_size: int = 512):
+    """Sort-based dispatch: all O(T·E·C) one-hots replaced by an argsort
+    over routing slots plus index gathers.  Identical routing semantics to
+    the one-hot path (token-choice top-k, per-group capacity C, overflow
+    slots dropped in slot order)."""
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    n = T // g
+    xt = x.reshape(n, g, D)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if n_experts < E:
+        logits = logits - jnp.where(jnp.arange(E) < n_experts, 0.0, 1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (n, g, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = _capacity(g, E, top_k, capacity_factor)
+    gk = g * top_k
+    # routing slots in (token-major, k) order — matches the one-hot path
+    flat_e = gate_idx.reshape(n, gk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)          # (n, gk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    # position of each sorted slot within its expert segment
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(
+        sorted_e)                                             # (n, E)
+    pos_sorted = jnp.arange(gk)[None, :] - \
+        jnp.take_along_axis(starts, sorted_e, axis=1)         # (n, gk)
+    keep_sorted = pos_sorted < C
+    slot_sorted = sorted_e * C + jnp.clip(pos_sorted, 0, C - 1)
+
+    # token id of each sorted slot; sentinel g for dropped slots
+    tok_sorted = order // top_k                               # (n, gk)
+    tok_sorted = jnp.where(keep_sorted, tok_sorted, g)
+
+    # expert-slot -> token map via an int32 scatter (tiny: (n, E*C));
+    # dropped slots write out-of-bounds and are discarded by mode="drop"
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], (n, gk))
+    tok_for_slot = jnp.full((n, E * C), g, jnp.int32)
+    safe_slot = jnp.where(keep_sorted, slot_sorted, E * C)
+    tok_for_slot = tok_for_slot.at[rows, safe_slot].set(
+        tok_sorted.astype(jnp.int32), mode="drop")
+
+    # dispatch: gather token vectors into expert slots (zero row for empty)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((n, 1, D), xt.dtype)], axis=1)
+    xe = jnp.take_along_axis(xt_pad, tok_for_slot[..., None], axis=1)
+    xe = xe.reshape(n, E, C, D)
+    xe = constrain(xe, None, "act_experts", None, None)
+
+    h = jnp.einsum("necd,edf->necf", xe, p["w_up"])
+    gt = jnp.einsum("necd,edf->necf", xe, p["w_gate"])
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(gt) * h
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    ye = constrain(ye, None, "act_experts", None, None)
+
+    # combine: each token gathers its k expert slots back
+    pos_unsorted = jnp.zeros((n, gk), jnp.int32).at[rows, order].set(
+        pos_sorted.astype(jnp.int32))
+    keep_unsorted = jnp.take_along_axis(
+        keep_sorted, jnp.argsort(order, axis=1), axis=1)
+    slot_unsorted = flat_e * C + jnp.clip(pos_unsorted, 0, C - 1)
+    ye_flat = ye.reshape(n, E * C, D)
+    gathered = jnp.take_along_axis(ye_flat, slot_unsorted[..., None],
+                                   axis=1)                    # (n, gk, D)
+    w = (gate_vals.reshape(n, gk) *
+         keep_unsorted.astype(jnp.float32)).astype(x.dtype)
+    yt = jnp.einsum("ngkd,ngk->ngd",
+                    gathered.reshape(n, g, top_k, D),
+                    w.reshape(n, g, top_k))
+
+    # aux load-balancing loss
+    onehot_density = jnp.mean(
+        jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)[..., :n_experts]
+        .sum(axis=2), axis=(0, 1))
+    p_mean = jnp.mean(probs[..., :n_experts], axis=(0, 1))
+    aux = n_experts * jnp.sum(onehot_density * p_mean)
+
+    if "shared" in p:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("ngd,do->ngo", xt.astype(jnp.float32),
+                       p["shared_gate"].astype(jnp.float32)))
+        ys = mlp(p["shared"], xt, activation=activation)
+        yt = yt + (sg * ys.astype(jnp.float32)).astype(yt.dtype)
+
+    y = yt.reshape(B, S, D)
+    return constrain(y, "act_batch", "act_seq", None), aux

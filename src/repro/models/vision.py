@@ -1,0 +1,27 @@
+"""VLM / audio modality frontends — STUBS per the assignment.
+
+``input_specs()`` supplies precomputed patch/frame embeddings; these helpers
+define their shapes and a deterministic synthetic generator for smoke tests.
+The real InternViT / Whisper-conv frontends are out of scope (the backbone
+is the assigned architecture); see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def patch_embed_spec(batch: int, n_tokens: int, d_model: int
+                     ) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, n_tokens, d_model), jnp.bfloat16)
+
+
+def frame_embed_spec(batch: int, n_frames: int, d_model: int
+                     ) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, n_frames, d_model), jnp.bfloat16)
+
+
+def synthetic_embeds(key, spec: jax.ShapeDtypeStruct):
+    return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02
+            ).astype(spec.dtype)

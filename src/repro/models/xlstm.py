@@ -1,0 +1,192 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory with recurrent gating).
+
+TPU adaptation (DESIGN.md §2): the mLSTM recurrence
+``C_t = f_t C_{t-1} + i_t v_t k_tᵀ`` is an SSD instance (per-head scalar
+decay ``log σ(f)``, input injection ``i``), so training/prefill reuse the
+chunked MXU-friendly ``ssd()`` from models/ssm.py instead of a CUDA-style
+fused recurrent kernel.  The sLSTM's gate recurrence (R·h_{t-1}) is a true
+serial dependency — it runs as a lax.scan over time with block-diagonal
+per-head recurrent weights, and its latency-boundedness is visible (by
+design) in the roofline tables.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from .layers import Pm, rmsnorm, rmsnorm_spec
+from .ssm import ssd, ssd_decode_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block  (proj factor 2, conv + qkv inside the up-projected space)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = d_inner // H
+    return d_inner, H, hd
+
+
+def mlstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, H, hd = mlstm_dims(cfg)
+    return {
+        "w_up": Pm((d, 2 * d_inner), ("embed", "ff")),       # [x, z]
+        "conv_w": Pm((4, d_inner), ("conv", "ff"), scale=0.5),
+        "conv_b": Pm((d_inner,), ("ff",), init="zeros"),
+        "wq": Pm((d_inner, d_inner), ("embed", "heads")),
+        "wk": Pm((d_inner, d_inner), ("embed", "heads")),
+        "wv": Pm((d_inner, d_inner), ("embed", "heads")),
+        "w_if": Pm((d_inner, 2 * H), ("embed", "heads")),    # input/forget gates
+        "b_if": Pm((2 * H,), ("heads",), init="zeros"),
+        "norm": rmsnorm_spec(d_inner),
+        "w_down": Pm((d_inner, d), ("ff", "embed")),
+    }
+
+
+def _conv1d(w, b, x, state=None):
+    K = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(y + b), new_state
+
+
+def mlstm(p, cfg, x, *, state=None, conv_state=None, decode=False):
+    """x: (B, S, D) -> (y, (matrix_state, conv_state))."""
+    B, S, D = x.shape
+    d_inner, H, hd = mlstm_dims(cfg)
+
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    up = constrain(up, "act_batch", None, "act_ff")
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = _conv1d(p["conv_w"], p["conv_b"], xi, state=conv_state)
+
+    q = jnp.einsum("bsf,fg->bsg", xc, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsf,fg->bsg", xc, p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsf,fg->bsg", xi, p["wv"]).reshape(B, S, H, hd)
+    k = k / math.sqrt(hd)
+
+    gates = jnp.einsum("bsf,fg->bsg", xc, p["w_if"]) + p["b_if"]
+    i_gate, f_gate = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_gate)                  # (B,S,H) decay
+    i_in = jnp.exp(jax.nn.log_sigmoid(i_gate))          # bounded injection
+
+    xh = v * i_in[..., None].astype(v.dtype)
+    if decode:
+        if state is None:
+            state = jnp.zeros((B, H, hd, hd), jnp.float32)
+        y, new_state = ssd_decode_step(state, xh, log_f, k, q)
+    else:
+        y, new_state = ssd(xh, log_f, k, q, chunk=cfg.ssm_chunk,
+                           initial_state=state,
+                           unroll=getattr(cfg, "unroll_scans", False))
+
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_down"])
+    return constrain(out, "act_batch", "act_seq", None), (new_state, new_conv)
+
+
+def mlstm_state_specs(cfg, batch: int):
+    d_inner, H, hd = mlstm_dims(cfg)
+    mat = jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32)
+    conv = jax.ShapeDtypeStruct((batch, 3, d_inner), jnp.bfloat16)
+    return (mat, ("act_batch", "act_heads", None, None)), \
+        (conv, ("act_batch", None, "act_ff"))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block  (scalar memory, recurrent gates, post-FFN with pf = 4/3)
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    d_ff = int(4 * d / 3)
+    return {
+        "norm_in": rmsnorm_spec(d),
+        "w_in": Pm((d, 4 * d), ("embed", "ff")),             # i, f, z, o
+        "r": Pm((H, hd, 4 * hd), ("heads", None, None),
+                scale=1.0 / math.sqrt(hd)),                  # block-diag recurrent
+        "b": Pm((4 * d,), ("ff",), init="zeros"),
+        # post FFN (GLU, pf 4/3) — part of the sLSTM block per the paper,
+        # hence the block owns both residual connections (self_residual).
+        "norm_ff": rmsnorm_spec(d),
+        "w_ff_up": Pm((d, 2 * d_ff), ("embed", "ff")),
+        "w_ff_down": Pm((d_ff, d), ("ff", "embed")),
+    }
+
+
+def _slstm_cell(p, H, hd, carry, wx_t):
+    """One stabilised sLSTM step.  carry: (c, n, h, m) each (B, H, hd)."""
+    c, n, h, m = carry
+    rh = jnp.einsum("bhd,hdg->bhg", h, p["r"].astype(jnp.float32))
+    pre = wx_t + rh                                     # (B, H, 4*hd)
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)                 # stabiliser
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_t)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm(p, cfg, x, *, state=None, decode=False):
+    """x: (B, S, D) raw residual stream -> (y, state).
+
+    Self-residual block (the sLSTM block owns its two residual connections,
+    including the pf=4/3 GLU FFN the xLSTM paper attaches to sLSTM).
+    state: (c, n, h, m) each (B, H, hd).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+
+    xn = rmsnorm(p["norm_in"], x)
+    wx = (jnp.einsum("bsd,dg->bsg", xn, p["w_in"]) + p["b"]).astype(jnp.float32)
+    wx = wx.reshape(B, S, H, 4 * hd)
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((B, H, hd), -1e9, jnp.float32))
+
+    if decode:
+        new_state, h = _slstm_cell(p, H, hd, state, wx[:, 0])
+        hs = h[:, None]
+    else:
+        def step(carry, wx_t):
+            return _slstm_cell(p, H, hd, carry, wx_t)
+
+        new_state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3))
+        hs = hs.transpose(1, 0, 2, 3)                   # (B, S, H, hd)
+
+    x = x + constrain(hs.reshape(B, S, D).astype(x.dtype),
+                      "act_batch", "act_seq", None)
+
+    # post-FFN (GLU) with its own residual
+    y = rmsnorm(p["norm_ff"], x)
+    u = jnp.einsum("bsd,df->bsf", y, p["w_ff_up"])
+    a, g = jnp.split(u, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * a, p["w_ff_down"])
+    out = x + constrain(y, "act_batch", "act_seq", None)
+    return out, new_state
+
+
+def slstm_state_specs(cfg, batch: int):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    s = jax.ShapeDtypeStruct((batch, H, hd), jnp.float32)
+    axes = ("act_batch", "act_heads", None)
+    return tuple((s, axes) for _ in range(4))

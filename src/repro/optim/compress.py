@@ -1,0 +1,62 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 2-pod scale the DCN all-reduce of bf16 gradients is the slowest
+collective; quantising the cross-pod payload to int8 with per-tensor scales
+halves it.  Error feedback (residual carried to the next step) keeps the
+compression unbiased in the long run (1-bit Adam / EF-SGD lineage).
+
+The compression is applied *around* the pod-axis psum only:
+    g_local  -> q = quant(g + residual) -> psum(q) over 'pod' -> dequant
+intra-pod reduction stays full-precision.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, residual=None):
+    """Returns (int8 values, fp32 scale, new residual)."""
+    g32 = g.astype(jnp.float32)
+    if residual is not None:
+        g32 = g32 + residual
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g, axis_name: str, residual=None):
+    """psum over ``axis_name`` with int8 payload + error feedback.
+
+    The scale is itself psum-maxed so every pod dequantises identically.
+    """
+    q, scale, new_residual = quantize(g, residual)
+    scale = jax.lax.pmax(scale, axis_name)
+    # requantise against the shared scale so the int8 sum is exact
+    g32 = g.astype(jnp.float32) + (residual if residual is not None else 0.0)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return (total.astype(jnp.float32) * scale / n).astype(g.dtype), \
+        new_residual
+
+
+def tree_compressed_psum(grads, axis_name: str, residuals=None):
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: None, grads,
+                                 is_leaf=lambda x: x is None)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = (tdef.flatten_up_to(residuals)
+              if jax.tree.leaves(residuals) else [None] * len(flat_g))
+    out = [compressed_psum(g, axis_name, r)
+           for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])

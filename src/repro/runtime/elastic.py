@@ -1,0 +1,87 @@
+"""Elastic re-planning — the paper's 'operational change' scenario, automated.
+
+Scission §II-B(vi): when bandwidth shifts, a resource is drained for
+maintenance, or a node fails, the deployment must re-partition quickly.
+Because benchmark data is cached per (block, resource), re-planning is a
+pure query (<50 ms budget) — no re-benchmarking, no re-compile of
+unaffected stages.
+
+:class:`ElasticController` watches a resource-membership view and emits a
+new :class:`PartitionConfig` whenever the view or the network model changes.
+The same mechanism serves fleet-scale elasticity: scaling the 'cloud' tier
+from one pod to two is just a resource swap ('pod_v5e256' -> a 512-chip
+aggregate) followed by a re-query.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.core.network import NetworkModel
+from repro.core.partition import PartitionConfig
+from repro.core.planner import Scission
+from repro.core.query import Query
+from repro.core.resources import Resource
+
+
+@dataclass
+class PlanEvent:
+    reason: str
+    wall_time: float
+    plan_time_s: float
+    config: PartitionConfig
+
+
+class ElasticController:
+    def __init__(self, scission: Scission, model: str,
+                 input_bytes: float = 150e3, query: Query | None = None,
+                 graph=None):
+        self.scission = scission
+        self.model = model
+        self.input_bytes = input_bytes
+        self.query = query or Query(top_n=1)
+        self.graph = graph            # for incremental benchmarking on join
+        self.history: list[PlanEvent] = []
+        self._replan("initial")
+
+    @property
+    def current(self) -> PartitionConfig:
+        return self.history[-1].config
+
+    def _replan(self, reason: str) -> PlanEvent:
+        t0 = time.perf_counter()
+        res = self.scission.query(self.model, self.query, self.input_bytes)
+        ev = PlanEvent(reason=reason, wall_time=time.time(),
+                       plan_time_s=time.perf_counter() - t0,
+                       config=res.best)
+        self.history.append(ev)
+        return ev
+
+    # -- operational changes --------------------------------------------------
+    def on_resource_lost(self, name: str) -> PlanEvent:
+        """Node failure / maintenance drain: drop the resource, re-query."""
+        remaining = [r for r in self.scission.resources if r.name != name]
+        self.scission = self.scission.with_resources(remaining)
+        return self._replan(f"lost:{name}")
+
+    def on_resource_joined(self, resource: Resource) -> PlanEvent:
+        """Elastic scale-up: Scission Step 3 runs incrementally for the new
+        resource only (existing records are reused), then a re-query."""
+        self.scission.resources = [*self.scission.resources, resource]
+        self.scission._engines.clear()
+        if self.graph is not None:
+            self.scission.benchmark_resource(self.graph, resource)
+        return self._replan(f"joined:{resource.name}")
+
+    def on_network_change(self, network: NetworkModel) -> PlanEvent:
+        """Bandwidth shift (the drone-leaves-low-coverage case)."""
+        old = self.scission
+        self.scission = Scission(
+            resources=old.resources, network=network, source=old.source,
+            provider=old.provider, runs=old.runs)
+        # carry cached benchmark DBs — they are network-independent
+        for db in old._dbs.values():
+            self.scission.load(db)
+        return self._replan("network-change")

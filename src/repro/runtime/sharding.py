@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules (DP/FSDP/TP/SP/EP) for the model zoo.
+
+Model code annotates arrays with *logical* axes ("act_batch", "act_seq",
+"heads", "ff", ...).  A :class:`AxisRules` table maps logical axes to mesh
+axes; ``constrain`` applies ``with_sharding_constraint`` when a mesh is
+active and is a no-op otherwise (so the same model code runs in single-device
+smoke tests and in the 512-chip dry-run).
+
+Default production rules implement:
+
+* DP    — batch over ``data`` (and ``pod`` when present),
+* FSDP  — parameter ``embed`` dim over ``data`` (ZeRO-3 style: XLA
+          all-gathers weights per layer inside the scan body),
+* TP    — ``heads`` / ``ff`` / ``vocab`` / ``experts`` over ``model``,
+* SP    — inter-block activation ``act_seq`` over ``model`` (sequence
+          parallelism; attention/mixer internally re-gathers),
+* EP    — MoE ``experts`` over ``model``.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    rules: dict[str, tuple[str, ...] | None] = field(default_factory=dict)
+
+    def spec(self, logical_axes: tuple[str | None, ...]) -> P:
+        parts = []
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax is not None else None
+            if m is None:
+                parts.append(None)
+            elif len(m) == 1:
+                parts.append(m[0])
+            else:
+                parts.append(tuple(m))
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def with_overrides(self, **kv) -> "AxisRules":
+        new = dict(self.rules)
+        for k, v in kv.items():
+            new[k] = v
+        return AxisRules(new)
+
+
+def single_pod_rules() -> AxisRules:
+    return AxisRules({
+        # activations
+        "act_batch": ("data",),
+        "act_seq": ("model",),       # SP between blocks
+        "act_embed": None,
+        "act_heads": ("model",),     # TP inside attention
+        "act_ff": ("model",),
+        "act_vocab": ("model",),
+        "act_experts": ("model",),
+        "act_kv_seq": ("model",),    # flash-decoding style KV split
+        "act_kv_seq_full": ("data", "model"),  # batch=1 long-context decode
+        # parameters
+        "embed": ("data",),          # FSDP
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "layers": None,
+        "head_dim": None,
+        "state": None,
+        "conv": None,
+        "unsharded": None,
+    })
+
+
+def multi_pod_rules() -> AxisRules:
+    r = single_pod_rules()
+    return r.with_overrides(
+        act_batch=("pod", "data"),
+        embed=("data",),             # FSDP stays intra-pod (cheap all-gather)
+        act_kv_seq_full=("pod", "data", "model"),
+    )
+
+
+def smoke_rules() -> AxisRules:
+    """Everything replicated — used on single-device CPU tests."""
+    return AxisRules({})
+
+
+# -- thread-local active rules ------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: AxisRules | None = None
+        self.mesh: Mesh | None = None
+
+
+_ctx = _Ctx()
+
+
+class use_rules:
+    """Context manager activating (rules, mesh) for ``constrain``."""
+
+    def __init__(self, rules: AxisRules | None, mesh: Mesh | None = None):
+        self.rules, self.mesh = rules, mesh
+
+    def __enter__(self):
+        self._old = (_ctx.rules, _ctx.mesh)
+        _ctx.rules, _ctx.mesh = self.rules, self.mesh
+        return self
+
+    def __exit__(self, *exc):
+        _ctx.rules, _ctx.mesh = self._old
+        return False
+
+
+def active_rules() -> AxisRules | None:
+    return _ctx.rules
+
+
+def _divisible_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop mesh axes from dims they do not divide evenly (e.g. batch=1 in
+    long-context decode, 1500-frame encoder sequences): a wrong constraint
+    is a trace error, an omitted one just costs a reshard."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    used: set[str] = set()
+    for i, p in enumerate(spec):
+        if p is None or i >= len(shape):
+            parts.append(None)
+            continue
+        axes = (p,) if isinstance(p, str) else tuple(p)
+        if any(a in used for a in axes):   # an axis may shard only one dim
+            parts.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        if total and shape[i] % total == 0:
+            parts.append(p)
+            used.update(axes)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x, *logical_axes: str | None):
+    """Apply a sharding constraint expressed in logical axes (no-op when no
+    rules are active, e.g. in CPU smoke tests)."""
+    rules = _ctx.rules
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes)
+    if _ctx.mesh is not None:
+        spec = _divisible_spec(_ctx.mesh, spec, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_ctx.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, rules: AxisRules,
+                   logical_axes: tuple[str | None, ...]) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(logical_axes))
+
+
+def tree_shardings(mesh: Mesh, rules: AxisRules, axes_tree):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: named_sharding(mesh, rules, axes),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,3 @@
+from .engine import KVCachePool, Request, ServingEngine
+
+__all__ = ["KVCachePool", "Request", "ServingEngine"]

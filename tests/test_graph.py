@@ -1,0 +1,106 @@
+"""Graph IR: partition points, block fusion, branching semantics (§II-A)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import LayerGraph, LayerNode, fuse_blocks, linear_graph
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _relu_node(name="relu"):
+    return LayerNode(name=name, kind="act", apply=jax.nn.relu)
+
+
+def _dense_node(d_in, d_out, name="dense", key=0):
+    w = jax.random.normal(jax.random.PRNGKey(key), (d_in, d_out)) * 0.02
+    return LayerNode(name=name, kind="dense", apply=lambda x: x @ w,
+                     flops=2.0 * d_in * d_out, param_bytes=4 * d_in * d_out)
+
+
+def make_linear(n_layers=5, d=8):
+    layers = [_dense_node(d, d, name=f"fc{i}", key=i) for i in range(n_layers)]
+    return linear_graph("lin", _spec(1, d), layers)
+
+
+def make_branching(d=8):
+    """input -> a -> (b1 | b2) -> add -> c : only cuts after a, after add."""
+    g = LayerGraph("branch")
+    i = g.input(_spec(1, d))
+    a = g.add(_dense_node(d, d, "a", 1), [i])
+    b1 = g.add(_dense_node(d, d, "b1", 2), [a])
+    b2 = g.add(_dense_node(d, d, "b2", 3), [a])
+    add = g.add(LayerNode("add", "merge", apply=lambda x, y: x + y), [b1, b2])
+    c = g.add(_dense_node(d, d, "c", 4), [add])
+    g.trace()
+    return g
+
+
+class TestLinear:
+    def test_partition_points_n_minus_2(self):
+        # N layers + input node; paper: N-2 points for an N-layer linear DNN
+        # (our node count includes the input => points = n_nodes - 2).
+        g = make_linear(5)
+        assert len(g.partition_points()) == g.n_layers - 2
+
+    def test_blocks_cover_all_nodes(self):
+        g = make_linear(6)
+        blocks = fuse_blocks(g)
+        ids = [i for b in blocks for i in b.node_ids]
+        assert ids == list(range(g.n_layers))
+
+    def test_first_block_absorbs_input(self):
+        g = make_linear(4)
+        blocks = fuse_blocks(g)
+        assert blocks[0].node_ids[:2] == [0, 1]  # input fused with layer 1
+
+    def test_output_bytes(self):
+        g = make_linear(3, d=8)
+        blocks = fuse_blocks(g)
+        for b in blocks:
+            assert b.output_bytes == 8 * 4  # (1, 8) float32
+
+
+class TestBranching:
+    def test_branch_fused_into_block(self):
+        g = make_branching()
+        points = g.partition_points()
+        # valid cuts: after 'a' (idx 1) and after 'add' (idx 4) only
+        assert points == [1, 4]
+        blocks = fuse_blocks(g)
+        assert len(blocks) == 3
+        assert blocks[1].kinds == ["dense", "dense", "merge"]
+
+    def test_block_callable_matches_full_graph(self):
+        g = make_branching()
+        blocks = fuse_blocks(g)
+        x = jax.random.normal(jax.random.PRNGKey(7), (1, 8))
+        # full graph
+        vals = [x]
+        for i in range(1, g.n_layers):
+            ins = [vals[p] for p in g.preds[i]]
+            vals.append(g.nodes[i].apply(*ins))
+        want = vals[-1]
+        # block chain
+        y = x
+        for b in blocks:
+            y = b.make_callable()(y)
+        assert jnp.allclose(y, want, atol=1e-6)
+
+    def test_invalid_graph_rejected(self):
+        g = LayerGraph("bad")
+        g.input(_spec(1, 4))
+        g.add(_dense_node(4, 4, "x", 0), [0])
+        g.add(_dense_node(4, 4, "dangling", 1), [0])  # second sink
+        with pytest.raises(ValueError):
+            g.validate()
+
+
+def test_crossing_counts_monotone_bounds():
+    g = make_branching()
+    counts = g.crossing_counts()
+    assert counts[-1] == 0            # nothing crosses after the sink
+    assert all(c >= 1 for c in counts[:-1])

@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per the assignment; tolerances follow the usual
+bf16-kernel practice (rtol ~2e-2 bf16, 1e-5 fp32).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ref import (decode_attention_ref, flash_attention_ref,
+                               ssd_ref)
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _qkv(key, B, Sq, Sk, H, Hk, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hk, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,H,Hk,hd", [
+        (1, 256, 4, 4, 64),       # MHA
+        (2, 256, 8, 2, 64),       # GQA 4:1
+        (1, 512, 4, 1, 128),      # MQA, bigger head
+        (1, 128, 2, 2, 256),      # gemma-style head_dim
+    ])
+    def test_causal_matches_ref(self, B, S, H, Hk, hd, dtype):
+        q, k, v = _qkv(jax.random.PRNGKey(0), B, S, S, H, Hk, hd, dtype)
+        got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                              interpret=True)
+        want = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_non_causal(self):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 2, 256, 256, 4, 4, 64,
+                       jnp.float32)
+        got = flash_attention(q, k, v, causal=False, interpret=True)
+        want = flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[jnp.float32])
+
+    @pytest.mark.parametrize("window", [64, 128, 200])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(jax.random.PRNGKey(2), 1, 512, 512, 4, 2, 64,
+                       jnp.float32)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        want = flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[jnp.float32])
+
+    def test_softcap(self):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 1, 256, 256, 4, 2, 64,
+                       jnp.float32)
+        got = flash_attention(q, k, v, causal=True, softcap=50.0,
+                              interpret=True)
+        want = flash_attention_ref(q, k, v, causal=True, softcap=50.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[jnp.float32])
+
+    def test_uneven_blocks(self):
+        q, k, v = _qkv(jax.random.PRNGKey(4), 1, 384, 384, 2, 2, 64,
+                       jnp.float32)
+        got = flash_attention(q, k, v, causal=True, block_q=128, block_k=64,
+                              interpret=True)
+        want = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[jnp.float32])
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,Smax,H,Hk,hd", [
+        (2, 512, 4, 4, 64),
+        (4, 1024, 8, 2, 64),
+        (1, 512, 8, 1, 128),
+    ])
+    def test_matches_ref(self, B, Smax, H, Hk, hd, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(5), 4)
+        q = jax.random.normal(ks[0], (B, H, hd), jnp.float32).astype(dtype)
+        k = jax.random.normal(ks[1], (B, Smax, Hk, hd),
+                              jnp.float32).astype(dtype)
+        v = jax.random.normal(ks[2], (B, Smax, Hk, hd),
+                              jnp.float32).astype(dtype)
+        lengths = jax.random.randint(ks[3], (B,), 1, Smax + 1,
+                                     dtype=jnp.int32)
+        got = decode_attention(q, k, v, lengths, block_k=256, interpret=True)
+        want = decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_length_masking_exact(self):
+        """Entries past `length` must not influence the output at all."""
+        B, Smax, H, hd = 1, 512, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(6), 3)
+        q = jax.random.normal(ks[0], (B, H, hd))
+        k = jax.random.normal(ks[1], (B, Smax, H, hd))
+        v = jax.random.normal(ks[2], (B, Smax, H, hd))
+        lengths = jnp.array([300], jnp.int32)
+        got = decode_attention(q, k, v, lengths, interpret=True)
+        k2 = k.at[:, 300:].set(1e6)
+        v2 = v.at[:, 300:].set(-1e6)
+        got2 = decode_attention(q, k2, v2, lengths, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
+                                   rtol=1e-6)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (1, 256, 2, 64, 64, 64),
+        (2, 256, 4, 64, 32, 128),
+        (1, 512, 1, 128, 64, 128),
+    ])
+    def test_matches_sequential_ref(self, B, S, H, P, N, chunk, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(7), 4)
+        x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32).astype(dtype)
+        log_a = -jax.nn.softplus(
+            jax.random.normal(ks[1], (B, S, H), jnp.float32))
+        b = jax.random.normal(ks[2], (B, S, H, N), jnp.float32).astype(dtype)
+        c = jax.random.normal(ks[3], (B, S, H, N), jnp.float32).astype(dtype)
+        y, fin = ssd_scan(x, log_a, b, c, chunk=chunk, interpret=True)
+        y_ref, fin_ref = ssd_ref(x, log_a, b, c)
+        tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+            dict(rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_matches_model_ssd(self):
+        """Kernel vs the models/ssm.py chunked-jnp implementation."""
+        from repro.models.ssm import ssd as model_ssd
+        ks = jax.random.split(jax.random.PRNGKey(8), 4)
+        B, S, H, P, N = 2, 256, 2, 64, 64
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        log_a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        b = jax.random.normal(ks[2], (B, S, H, N))
+        c = jax.random.normal(ks[3], (B, S, H, N))
+        y1, f1 = ssd_scan(x, log_a, b, c, chunk=64, interpret=True)
+        y2, f2 = model_ssd(x, log_a, b, c, chunk=64)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                                   rtol=1e-4, atol=1e-4)

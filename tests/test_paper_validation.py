@@ -1,0 +1,137 @@
+"""Paper-claim validation on a deterministic (analytic) testbed.
+
+The wall-clock versions of these scenarios run in benchmarks/ (they depend
+on host speed); here the same decision engine is driven by the analytic
+provider so the paper's qualitative claims are asserted deterministically:
+
+C1 (Figs 6-8)  — the optimum flips with network conditions;
+C2 (Fig 9)     — the optimum is sensitive to input size;
+C3 (Figs 10-11)— 'use the whole pipeline' changes the split;
+C4 (Figs 12-14)— edge hardware changes the split;
+C5 (Tab IV)    — top-N rankings are consistent and pipeline-restricted;
+C6 (§III-B)    — querying cached benchmark data is <50 ms.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (AnalyticProvider, Query, Resource, Scission,
+                        paper_network, THREE_G, FOUR_G, WIRED)
+from repro.core.resources import (CLOUD_VM, EDGE_BOX_1, EDGE_BOX_2, GTX_1070,
+                                  RPI4)
+from repro.models import cnn_zoo
+
+
+def make_scission(link):
+    res = [
+        Resource("device", "device", RPI4),
+        Resource("edge1", "edge", EDGE_BOX_1),
+        Resource("edge2", "edge", EDGE_BOX_2),
+        Resource("cloud", "cloud", CLOUD_VM),
+        Resource("cloud_gpu", "cloud", GTX_1070),
+    ]
+    net = paper_network(link, edges=("edge1", "edge2"),
+                        clouds=("cloud", "cloud_gpu"))
+    return Scission(resources=res, network=net, source="device",
+                    provider=AnalyticProvider(), runs=1)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {n: cnn_zoo.build(n)
+            for n in ("MobileNetV2", "ResNet50", "InceptionV3", "VGG16")}
+
+
+@pytest.fixture(scope="module")
+def scissions(graphs):
+    out = {}
+    for name, link in (("3g", THREE_G), ("4g", FOUR_G), ("wired", WIRED)):
+        s = make_scission(link)
+        for g in graphs.values():
+            s.benchmark(g)
+        out[name] = s
+    return out
+
+
+class TestC1NetworkFlip:
+    def test_mobilenet_flips_device_to_cloud(self, scissions):
+        best_3g = scissions["3g"].best("MobileNetV2")
+        best_wired = scissions["wired"].best("MobileNetV2")
+        # slow uplink -> stay on device; fast uplink -> offload everything
+        assert best_3g.resources == ("device",)
+        assert best_wired.resources[-1] in ("cloud", "cloud_gpu")
+
+    def test_cloud_fraction_monotone_in_bandwidth(self, scissions):
+        def cloud_blocks(cfg):
+            return sum(s.end - s.start + 1 for s in cfg.segments
+                       if s.resource.startswith("cloud"))
+
+        per_net = [cloud_blocks(scissions[n].best("ResNet50"))
+                   for n in ("3g", "4g", "wired")]
+        assert per_net == sorted(per_net)
+
+
+class TestC2InputSize:
+    def test_larger_input_shifts_away_from_cloud(self, scissions):
+        s = scissions["3g"]
+
+        def offload_bytes(cfg):
+            return cfg.transfer_bytes
+
+        small = s.query("MobileNetV2", Query(top_n=1),
+                        input_bytes=50e3).best
+        huge = s.query("MobileNetV2", Query(top_n=1),
+                       input_bytes=5e6).best
+        # with a huge input the plan must not ship more data than before
+        assert offload_bytes(huge) <= max(offload_bytes(small), 5e6)
+        # and specifically: tiny input -> offloading attractive; huge input
+        # over 3G -> device-native
+        assert huge.resources == ("device",)
+
+
+class TestC3Constraints:
+    def test_full_pipeline_constraint_changes_split(self, scissions):
+        s = scissions["4g"]
+        free = s.best("ResNet50")
+        forced = s.query(
+            "ResNet50",
+            Query(top_n=1, must_use=("device", "edge1", "cloud_gpu"),
+                  exclude=("edge2", "cloud"))).best
+        assert set(forced.resources) == {"device", "edge1", "cloud_gpu"}
+        assert forced.latency_s >= free.latency_s
+
+
+class TestC4EdgeHardware:
+    def test_edge_choice_can_change_partition(self, scissions):
+        s = scissions["wired"]
+        q1 = Query(top_n=1, must_use=("edge1",), exclude=("edge2",))
+        q2 = Query(top_n=1, must_use=("edge2",), exclude=("edge1",))
+        b1 = s.query("InceptionV3", q1).best
+        b2 = s.query("InceptionV3", q2).best
+        # both are valid plans on their pipelines; latency reflects the
+        # hardware difference (edge2 is the faster box in the paper)
+        assert b1.latency_s != b2.latency_s
+
+
+class TestC5TopN:
+    def test_topn_pipeline_restriction(self, scissions):
+        s = scissions["wired"]
+        res = s.query("ResNet50",
+                      Query(top_n=3, pipelines=(("edge1", "cloud_gpu"),)))
+        assert 0 < len(res.configs) <= 3
+        for cfg in res.configs:
+            assert cfg.resources == ("edge1", "cloud_gpu")
+        lats = [c.latency_s for c in res.configs]
+        assert lats == sorted(lats)
+
+
+class TestC6QueryBudget:
+    def test_under_50ms_warm(self, scissions):
+        s = scissions["4g"]
+        s.query("VGG16")      # warm
+        t0 = time.perf_counter()
+        s.query("VGG16", Query(top_n=3, must_use=("edge1",)))
+        assert time.perf_counter() - t0 < 0.05

@@ -1,0 +1,182 @@
+"""Partitioning: exhaustive oracle vs DP lattice, cost model, constraints."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticProvider, BenchmarkDB, Constraints, CostModel,
+                        LATENCY, Link, NetworkModel, Objective,
+                        PartitionLattice, Query, QueryEngine, Resource,
+                        Segment, TRANSFER, benchmark_model,
+                        enumerate_partitions, linear_graph, ordered_pipelines,
+                        paper_testbed, rank)
+from repro.core.graph import LayerNode
+from repro.core.network import paper_network, FOUR_G, THREE_G
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4, DeviceModel
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def make_model(n=8, d=16, name="toy"):
+    layers = []
+    for i in range(n):
+        w = jax.random.normal(jax.random.PRNGKey(i), (d, d)) * 0.1
+        layers.append(LayerNode(name=f"fc{i}", kind="dense",
+                                apply=lambda x, w=w: jnp.tanh(x @ w),
+                                flops=2.0 * d * d, param_bytes=4 * d * d))
+    return linear_graph(name, _spec(1, d), layers)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    graph = make_model()
+    resources = [
+        Resource("device", "device", RPI4, speed_factor=30.0),
+        Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0),
+        Resource("cloud", "cloud", CLOUD_VM, speed_factor=1.0),
+    ]
+    db = benchmark_model(graph, resources, AnalyticProvider(), runs=1)
+    net = paper_network(FOUR_G, edges=("edge1",), clouds=("cloud",))
+    cost = CostModel(db=db, resources=resources, network=net,
+                     source="device", input_bytes=150e3)
+    return graph, resources, db, net, cost
+
+
+class TestCostModel:
+    def test_native_device_has_no_comm(self, setup):
+        _, _, db, _, cost = setup
+        cfg = cost.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        assert cfg.comm_s == 0.0 and cfg.input_comm_s == 0.0
+        assert cfg.transfer_bytes == 0.0
+
+    def test_native_cloud_pays_input_transfer(self, setup):
+        _, _, db, net, cost = setup
+        cfg = cost.evaluate([Segment("cloud", 0, db.n_blocks - 1)])
+        assert cfg.input_comm_s == pytest.approx(
+            net.comm_time("device", "cloud", 150e3))
+        assert cfg.transfer_bytes == 150e3
+
+    def test_latency_is_additive(self, setup):
+        """Paper assumption 2: end-to-end = Σ compute + Σ comm."""
+        _, _, db, net, cost = setup
+        B = db.n_blocks
+        segs = [Segment("device", 0, 1), Segment("edge1", 2, 3),
+                Segment("cloud", 4, B - 1)]
+        cfg = cost.evaluate(segs)
+        manual = (sum(db.time("device", b) for b in (0, 1))
+                  + sum(db.time("edge1", b) for b in (2, 3))
+                  + sum(db.time("cloud", b) for b in range(4, B))
+                  + net.comm_time("device", "edge1", db.output_bytes(1))
+                  + net.comm_time("edge1", "cloud", db.output_bytes(3)))
+        assert cfg.latency_s == pytest.approx(manual)
+
+
+class TestExhaustive:
+    def test_pipeline_count(self, setup):
+        _, resources, *_ = setup
+        pipes = ordered_pipelines(resources)
+        # 1 device x 1 edge x 1 cloud: 2*2*2 - 1 = 7 pipelines
+        assert len(pipes) == 7
+
+    def test_config_count(self, setup):
+        _, _, db, _, cost = setup
+        B = db.n_blocks
+        configs = enumerate_partitions(cost)
+        want = sum(math.comb(B - 1, k - 1)
+                   for k in (1, 1, 1, 2, 2, 2, 3))
+        assert len(configs) == want
+
+    def test_segments_cover_blocks(self, setup):
+        _, _, db, _, cost = setup
+        for cfg in enumerate_partitions(cost):
+            covered = [b for s in cfg.segments
+                       for b in range(s.start, s.end + 1)]
+            assert covered == list(range(db.n_blocks))
+
+
+class TestLatticeVsOracle:
+    def test_unconstrained_optimum_matches(self, setup):
+        _, _, _, _, cost = setup
+        oracle = rank(enumerate_partitions(cost), LATENCY)[0]
+        got = PartitionLattice(cost).solve(top_n=1)[0]
+        assert got.latency_s == pytest.approx(oracle.latency_s)
+
+    def test_topn_matches(self, setup):
+        _, _, _, _, cost = setup
+        oracle = rank(enumerate_partitions(cost), LATENCY, top_n=5)
+        got = PartitionLattice(cost).solve(top_n=5)
+        assert len(got) == 5
+        for o, g in zip(oracle, got):
+            assert g.latency_s == pytest.approx(o.latency_s)
+
+    def test_must_use_all(self, setup):
+        _, _, _, _, cost = setup
+        cons = Constraints(must_use=("device", "edge1", "cloud"))
+        got = PartitionLattice(cost, cons).solve(top_n=1)[0]
+        oracle = rank([c for c in enumerate_partitions(cost)
+                       if set(c.resources) >= {"device", "edge1", "cloud"}],
+                      LATENCY)[0]
+        assert got.latency_s == pytest.approx(oracle.latency_s)
+        assert set(got.resources) == {"device", "edge1", "cloud"}
+
+    def test_exclude(self, setup):
+        _, _, _, _, cost = setup
+        cons = Constraints(exclude=("cloud",))
+        for cfg in PartitionLattice(cost, cons).solve(top_n=3):
+            assert "cloud" not in cfg.resources
+
+    def test_pin_block(self, setup):
+        _, _, _, _, cost = setup
+        cons = Constraints(pin={3: "edge1"})
+        cfg = PartitionLattice(cost, cons).solve(top_n=1)[0]
+        seg = next(s for s in cfg.segments if s.start <= 3 <= s.end)
+        assert seg.resource == "edge1"
+
+    def test_max_link_bytes(self, setup):
+        _, _, db, _, cost = setup
+        tiny = 1.0  # bytes — forbids any device->edge handoff and input xfer
+        cons = Constraints(max_link_bytes={("device", "edge1"): tiny,
+                                           ("device", "cloud"): tiny})
+        for cfg in PartitionLattice(cost, cons).solve(top_n=3):
+            assert cfg.resources == ("device",)
+
+    def test_transfer_objective(self, setup):
+        _, _, _, _, cost = setup
+        cfg = PartitionLattice(cost, objective=TRANSFER).solve(top_n=1)[0]
+        # minimal transfer = stay on the source device
+        assert cfg.resources == ("device",)
+        assert cfg.transfer_bytes == 0.0
+
+
+class TestQueryEngine:
+    def test_query_under_50ms(self, setup):
+        _, resources, db, net, _ = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        eng.run()  # warm the cache (paper: queries run on cached bench data)
+        res = eng.run(Query(top_n=3, must_use=("edge1",)))
+        assert res.query_time_s < 0.050
+        assert len(res.configs) == 3
+
+    def test_network_flip(self, setup):
+        """Figures 6-8: the optimum flips with the network condition when the
+        device is slow relative to the link."""
+        graph, resources, db, _, _ = setup
+        slow = paper_network(THREE_G, edges=("edge1",), clouds=("cloud",))
+        fast = NetworkModel().connect("device", "cloud",
+                                      Link("lan", 1e-3, 1e9))
+        e_slow = QueryEngine(db, resources, slow, "device", 150e3)
+        e_fast = QueryEngine(db, resources, fast, "device", 150e3)
+        best_slow = e_slow.run(Query(top_n=1)).best
+        best_fast = e_fast.run(Query(top_n=1)).best
+        # On a near-free link the cloud should win; on 3G it must not be
+        # *more* cloud-heavy than the fast-link optimum.
+        assert best_fast.resources == ("cloud",)
+        cloud_blocks = lambda c: sum(
+            s.end - s.start + 1 for s in c.segments if s.resource == "cloud")
+        assert cloud_blocks(best_slow) <= cloud_blocks(best_fast)

@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AnalyticProvider, Constraints, CostModel, LATENCY,
+                        Link, NetworkModel, PartitionLattice, Resource,
+                        Segment, benchmark_model, enumerate_partitions,
+                        linear_graph, rank)
+from repro.core.graph import LayerGraph, LayerNode
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+from repro.models.ssm import ssd
+from repro.kernels.ref import ssd_ref
+
+# ---------------------------------------------------------------------------
+# graph invariants
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_dag(draw):
+    """Random single-source single-sink layer DAG."""
+    n = draw(st.integers(3, 12))
+    g = LayerGraph("rand")
+    g.input(jax.ShapeDtypeStruct((1, 4), jnp.float32))
+    for i in range(1, n):
+        max_preds = min(i, 3)
+        k = draw(st.integers(1, max_preds))
+        preds = sorted(draw(st.sets(st.integers(0, i - 1), min_size=k,
+                                    max_size=k)))
+        g.add(LayerNode(f"n{i}", "add",
+                        apply=lambda *xs: sum(xs) * 0.5), preds)
+    # force single sink: connect all current sinks to a final node
+    succs = g.succs
+    sinks = [i for i, s in enumerate(succs) if not s]
+    if len(sinks) > 1:
+        g.add(LayerNode("sink", "add", apply=lambda *xs: sum(xs)), sinks)
+    g.trace()
+    return g
+
+
+@given(random_dag())
+@settings(max_examples=40, deadline=None)
+def test_blocks_partition_the_graph(g):
+    from repro.core import fuse_blocks
+    blocks = fuse_blocks(g)
+    ids = [i for b in blocks for i in b.node_ids]
+    assert ids == list(range(g.n_layers))
+
+
+@given(random_dag())
+@settings(max_examples=40, deadline=None)
+def test_block_chain_equals_graph(g):
+    """Executing the fused block chain == executing the raw DAG."""
+    from repro.core import fuse_blocks
+    x = jnp.ones((1, 4))
+    vals = [x]
+    for i in range(1, g.n_layers):
+        vals.append(g.nodes[i].apply(*[vals[p] for p in g.preds[i]]))
+    want = vals[-1]
+    y = x
+    for b in fuse_blocks(g):
+        y = b.make_callable()(y)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# partitioning invariants
+# ---------------------------------------------------------------------------
+
+def _toy_cost(n_blocks: int, seed: int) -> CostModel:
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i in range(n_blocks):
+        d = int(rng.integers(4, 16)) * 2
+        layers.append(LayerNode(f"l{i}", "dense",
+                                apply=lambda x, d=d: jnp.tile(
+                                    x[..., :1], (1, d)),
+                                flops=float(rng.integers(1, 100)) * 1e6))
+    g = linear_graph(f"toy{seed}", jax.ShapeDtypeStruct((1, 8), jnp.float32),
+                     layers)
+    res = [Resource("device", "device", RPI4, speed_factor=30.0),
+           Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0),
+           Resource("cloud", "cloud", CLOUD_VM, speed_factor=1.0)]
+    db = benchmark_model(g, res, AnalyticProvider(), runs=1)
+    net = NetworkModel(default=Link("l", 0.01, 1e6))
+    return CostModel(db=db, resources=res, network=net, source="device",
+                     input_bytes=1e5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_lattice_matches_oracle(seed):
+    """DP lattice optimum == exhaustive optimum on random cost models."""
+    cost = _toy_cost(6, seed)
+    oracle = rank(enumerate_partitions(cost), LATENCY)[0]
+    got = PartitionLattice(cost).solve(top_n=1)[0]
+    assert abs(got.latency_s - oracle.latency_s) < 1e-9
+
+
+@given(st.integers(0, 1000), st.integers(1, 5))
+@settings(max_examples=15, deadline=None)
+def test_topn_sorted_and_unique(seed, n):
+    cost = _toy_cost(5, seed)
+    configs = PartitionLattice(cost).solve(top_n=n)
+    lats = [c.latency_s for c in configs]
+    assert lats == sorted(lats)
+    assert len({c.segments for c in configs}) == len(configs)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_constraints_never_improve_latency(seed):
+    """Any constraint can only worsen (or keep) the optimum — a fundamental
+    sanity property of constrained optimisation."""
+    cost = _toy_cost(6, seed)
+    free = PartitionLattice(cost).solve(top_n=1)[0]
+    cons = Constraints(must_use=("device", "cloud"))
+    constrained = PartitionLattice(cost, cons).solve(top_n=1)
+    if constrained:
+        assert constrained[0].latency_s >= free.latency_s - 1e-12
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_faster_network_never_hurts(seed):
+    """Monotonicity: infinitely fast links can only reduce the optimum."""
+    cost_slow = _toy_cost(5, seed)
+    fast_net = NetworkModel(default=Link("fast", 0.0, 1e12))
+    cost_fast = CostModel(db=cost_slow.db, resources=cost_slow.resources,
+                          network=fast_net, source="device",
+                          input_bytes=1e5)
+    slow = PartitionLattice(cost_slow).solve(top_n=1)[0]
+    fast = PartitionLattice(cost_fast).solve(top_n=1)[0]
+    assert fast.latency_s <= slow.latency_s + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# SSD invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 100), st.sampled_from([16, 32, 64]),
+       st.sampled_from([8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_equals_sequential(seed, S, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    B, H, P, N = 2, 2, 8, 4
+    x = jax.random.normal(keys[0], (B, S, H, P))
+    log_a = -jax.nn.softplus(jax.random.normal(keys[1], (B, S, H)))
+    b = jax.random.normal(keys[2], (B, S, H, N))
+    c = jax.random.normal(keys[3], (B, S, H, N))
+    y1, f1 = ssd(x, log_a, b, c, chunk=chunk)
+    y2, f2 = ssd_ref(x, log_a, b, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,113 @@
+"""Pipeline executor + LM graph adapter + elastic controller integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticProvider, Query, Resource, Scission,
+                        paper_network, FOUR_G, fuse_blocks)
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+from repro.models import build_model, get_config, cnn_zoo
+from repro.models.graph_adapter import lm_to_graph
+from repro.runtime.elastic import ElasticController
+from repro.runtime.pipeline import PipelineExecutor
+
+
+def _scission():
+    res = [Resource("device", "device", RPI4),
+           Resource("edge1", "edge", EDGE_BOX_1),
+           Resource("cloud", "cloud", CLOUD_VM)]
+    net = paper_network(FOUR_G, edges=("edge1",), clouds=("cloud",))
+    return Scission(resources=res, network=net, source="device",
+                    provider=AnalyticProvider(), runs=1)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("granite-8b").replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=128, remat=False, q_chunk=32, loss_seq_chunk=None)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestGraphAdapter:
+    def test_lm_graph_structure(self, small_lm):
+        cfg, model, params = small_lm
+        g = lm_to_graph(model, params, batch=2, seq_len=16)
+        # input + embed + 3 groups + head
+        assert g.n_layers == 2 + cfg.n_groups + 1
+        blocks = fuse_blocks(g)
+        assert len(blocks) >= cfg.n_groups
+
+    def test_adapter_matches_model(self, small_lm):
+        cfg, model, params = small_lm
+        g = lm_to_graph(model, params, batch=2, seq_len=16)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                    cfg.vocab)
+        x = tokens
+        for b in fuse_blocks(g):
+            x = b.make_callable()(x)
+        hidden, _ = model.forward(params, tokens)
+        from repro.models import layers as L
+        want = L.unembed(params["embed"], hidden[:, -1:])
+        assert (np.argmax(np.asarray(x), -1)
+                == np.argmax(np.asarray(want), -1)).all()
+
+
+class TestPipelineExecutor:
+    def test_executes_partition(self, small_lm):
+        cfg, model, params = small_lm
+        g = lm_to_graph(model, params, batch=2, seq_len=16)
+        s = _scission()
+        s.benchmark(g)
+        best = s.query(g.name, Query(
+            top_n=1, must_use=("device", "edge1", "cloud")),
+            input_bytes=2 * 16 * 4).best
+        assert len(best.segments) == 3
+        ex = PipelineExecutor(g, best, s.network, source="device")
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                    cfg.vocab)
+        out, timings = ex.run(tokens, collect_timing=True)
+        assert out.shape == (2, 1, cfg.vocab)
+        assert len(timings) == 3
+        assert all(t.compute_s > 0 for t in timings)
+        # comm is charged when crossing resources (stage 2 and 3)
+        assert timings[1].comm_in_s > 0 and timings[2].comm_in_s > 0
+
+    def test_cnn_pipeline(self):
+        g = cnn_zoo.build("MobileNet")
+        s = _scission()
+        s.benchmark(g)
+        best = s.best("MobileNet")
+        ex = PipelineExecutor(g, best, s.network, source="device")
+        x = jnp.zeros(g.input_spec.shape, g.input_spec.dtype)
+        out, _ = ex.run(x)
+        assert out.shape == (1, 1000)
+        np.testing.assert_allclose(float(jnp.sum(out)), 1.0, rtol=1e-3)
+
+
+class TestElastic:
+    def test_drain_and_rejoin_replans(self):
+        g = cnn_zoo.build("MobileNet")
+        s = _scission()
+        s.benchmark(g)
+        ctl = ElasticController(s, "MobileNet", graph=g)
+        first = ctl.current
+        ev = ctl.on_resource_lost("cloud")
+        assert "cloud" not in ev.config.resources
+        new = Resource("cloud2", "cloud", CLOUD_VM)
+        ev2 = ctl.on_resource_joined(new)
+        assert ev2.config.latency_s <= ev.config.latency_s + 1e-9
+        assert len(ctl.history) == 3
+
+    def test_plan_survives_all_but_one(self):
+        g = cnn_zoo.build("MobileNet")
+        s = _scission()
+        s.benchmark(g)
+        ctl = ElasticController(s, "MobileNet", graph=g)
+        ctl.on_resource_lost("cloud")
+        ev = ctl.on_resource_lost("edge1")
+        assert ev.config.resources == ("device",)

@@ -1,0 +1,90 @@
+"""Serving engine: continuous batching, ragged lengths, pool recycling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serving import KVCachePool, Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("granite-8b").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=128, remat=False, q_chunk=32, loss_seq_chunk=None)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestPool:
+    def test_acquire_release(self, small_model):
+        _, model, _ = small_model
+        pool = KVCachePool(model, width=2, max_len=16)
+        a = pool.acquire(1)
+        b = pool.acquire(2)
+        assert {a, b} == {0, 1}
+        assert pool.acquire(3) is None
+        pool.release(a)
+        assert pool.acquire(3) == a
+
+
+class TestEngine:
+    def test_serves_all_requests(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, width=2, max_len=32)
+        rng = np.random.default_rng(1)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab,
+                                                   int(rng.integers(3, 8))),
+                        max_new_tokens=4) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 5
+        assert all(len(r.tokens) == 4 for r in done)
+        assert all(r.first_token_at is not None for r in done)
+
+    def test_matches_unbatched_greedy(self, small_model):
+        """Continuous-batched decode must equal one-at-a-time greedy."""
+        cfg, model, params = small_model
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(0, cfg.vocab, 6),
+                   rng.integers(0, cfg.vocab, 4)]
+        n_new = 5
+
+        # reference: sequential greedy via prefill+decode per request
+        def greedy(prompt):
+            cache = model.init_cache(batch=1, max_len=32)
+            logits, cache = jax.jit(model.prefill)(
+                params, jnp.asarray(prompt, jnp.int32)[None], cache)
+            toks = [int(jnp.argmax(logits[0, -1]))]
+            clen = len(prompt)
+            step = jax.jit(model.decode_step)
+            for _ in range(n_new - 1):
+                logits, cache = step(
+                    params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+                    jnp.int32(clen))
+                toks.append(int(jnp.argmax(logits[0, -1])))
+                clen += 1
+            return toks
+
+        want = [greedy(p) for p in prompts]
+
+        eng = ServingEngine(model, params, width=2, max_len=32)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=n_new))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        for r, w in zip(done, want):
+            assert r.tokens == w, (r.rid, r.tokens, w)
+
+    def test_slot_reuse_more_requests_than_width(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, width=1, max_len=32)
+        rng = np.random.default_rng(3)
+        for i in range(3):
+            eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4),
+                               max_new_tokens=3))
+        done = eng.run()
+        assert len(done) == 3
