@@ -19,8 +19,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (bench_elastic, bench_overhead, bench_partitions,
-                   bench_query, bench_roofline, bench_zoo)
+    from . import (bench_autotune, bench_elastic, bench_overhead,
+                   bench_partitions, bench_query, bench_roofline, bench_zoo)
 
     rows = []
     rows += bench_zoo.run(quick)            # Table I
@@ -29,6 +29,7 @@ def main() -> None:
     rows += bench_query.run(quick)          # <50ms query claim
     rows += bench_elastic.run(quick)        # motivation (vi): re-planning
     rows += bench_roofline.run(quick)       # §Roofline (from dry-run)
+    rows += bench_autotune.run(quick)       # kernel block-size autotuning
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

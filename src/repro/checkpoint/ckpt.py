@@ -7,6 +7,11 @@ Format: one ``.ckpt.zst`` file per save containing
 Leaves are serialised as (dtype, shape, raw bytes); bfloat16 round-trips via
 a uint16 view.  Writes go to ``<name>.tmp`` then ``os.replace`` so a crash
 mid-write never corrupts the latest checkpoint.
+
+``zstandard`` is optional: without it, checkpoints are written as raw
+msgpack (same file layout, no compression).  ``restore`` detects the zstd
+magic bytes, so compressed and uncompressed checkpoints interoperate
+whenever the library is present.
 """
 
 from __future__ import annotations
@@ -20,7 +25,29 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # optional dep — fall back to uncompressed
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is None:
+        return raw
+    return zstandard.ZstdCompressor(level=3).compress(raw)
+
+
+def _decompress(data: bytes) -> bytes:
+    if not data.startswith(_ZSTD_MAGIC):
+        return data              # written without compression
+    if zstandard is None:
+        raise RuntimeError(
+            "checkpoint is zstd-compressed but the 'zstandard' package is "
+            "not installed (pip install -r requirements-dev.txt)")
+    return zstandard.ZstdDecompressor().decompress(data)
 
 
 def _encode_leaf(x) -> dict:
@@ -49,7 +76,7 @@ def save(path: str, tree: Any, step: int = 0, meta: dict | None = None
         "leaves": [_encode_leaf(x) for x in leaves],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -61,7 +88,7 @@ def restore(path: str, like: Any) -> tuple[Any, int, dict]:
     """``like`` supplies the treedef (and optionally shardings via
     device_put by the caller)."""
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     leaves = [_decode_leaf(d) for d in payload["leaves"]]
     _, treedef = jax.tree.flatten(like)

@@ -30,13 +30,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.substrate import KernelAutotuner, compiled_costs
 from .graph import Block, LayerGraph, fuse_blocks
 from .resources import Resource
 
 
 @dataclass
 class BlockBenchmark:
-    """One (block, resource) measurement — the paper's Step 3 record."""
+    """One (block, resource) measurement — the paper's Step 3 record.
+
+    ``tuned_params`` records the autotuned block sizes (per kernel node)
+    the measurement was taken with, so a persisted DB documents exactly
+    which kernel configuration its timings describe.
+    """
 
     block: int
     resource: str
@@ -46,6 +52,7 @@ class BlockBenchmark:
     runs: int
     flops: float = 0.0
     bytes_accessed: float = 0.0
+    tuned_params: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -110,10 +117,19 @@ class TimingProvider:
 
     Faithful to the paper: 5 runs, averaged, after one warm-up (compilation)
     run, on real inputs of the block's input shape.
+
+    When constructed with a :class:`KernelAutotuner`, kernel-bearing layers
+    are block-size-tuned (per resource) before timing, so the DB records
+    tuned rather than default kernel timings.
     """
+
+    def __init__(self, tuner: KernelAutotuner | None = None):
+        self.tuner = tuner
 
     def measure(self, block: Block, resource: Resource, runs: int
                 ) -> tuple[float, float, float, float]:
+        if self.tuner is not None:
+            self.tuner.tune_block(block, resource=resource.name)
         fn = jax.jit(block.make_callable())
         x = _zeros_like_spec(block.in_spec)
         out = fn(x)  # warm-up / compile
@@ -133,14 +149,21 @@ class CompiledCostProvider:
 
     Empirical in the paper's sense — the numbers come from the compiled
     artifact of the *actual* block, not from an assumed per-layer-type model.
+    ``cost_analysis()`` output is normalized through the kernel substrate
+    (dict on some JAX versions, list-of-dicts on others).
     """
+
+    def __init__(self, tuner: KernelAutotuner | None = None):
+        self.tuner = tuner
 
     def measure(self, block: Block, resource: Resource, runs: int
                 ) -> tuple[float, float, float, float]:
+        if self.tuner is not None:
+            self.tuner.tune_block(block, resource=resource.name)
         lowered = jax.jit(block.make_callable()).lower(block.in_spec)
-        cost = lowered.compile().cost_analysis()
-        flops = float(cost.get("flops", 0.0))
-        nbytes = float(cost.get("bytes accessed", 0.0))
+        cost = compiled_costs(lowered.compile())
+        flops = cost.get("flops", 0.0)
+        nbytes = cost.get("bytes accessed", 0.0)
         t = resource.device.layer_time(flops, nbytes)
         return t, 0.0, flops, nbytes
 
@@ -167,13 +190,15 @@ def benchmark_model(graph: LayerGraph, resources: list[Resource],
     provider = provider or TimingProvider()
     blocks = blocks if blocks is not None else fuse_blocks(graph)
     db = BenchmarkDB(model=graph.name, n_blocks=len(blocks))
+    tuner = getattr(provider, "tuner", None)
     for res in resources:
         recs = []
         for blk in blocks:
             mean, std, flops, nbytes = provider.measure(blk, res, runs)
+            tuned = tuner.params_for_block(blk) if tuner is not None else {}
             recs.append(BlockBenchmark(
                 block=blk.index, resource=res.name, mean_time_s=mean,
                 std_time_s=std, output_bytes=blk.output_bytes, runs=runs,
-                flops=flops, bytes_accessed=nbytes))
+                flops=flops, bytes_accessed=nbytes, tuned_params=tuned))
         db.records[res.name] = recs
     return db

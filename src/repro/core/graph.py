@@ -51,6 +51,20 @@ class LayerNode:
     # Optional: compute FLOPs from (input specs, output spec) at trace time
     # (layers whose cost depends on activation shapes, e.g. convs).
     flops_fn: Callable[..., float] | None = None
+    # Optional autotuner hooks (kernels/substrate.py): ``kernel`` names the
+    # substrate kernel this layer wraps, ``kernel_factory(params)`` rebuilds
+    # ``apply`` for a candidate block-size dict, ``kernel_params`` holds the
+    # current (default or tuned) block sizes, and ``kernel_defaults`` is the
+    # immutable construction-time baseline sweeps are compared against.
+    kernel: str | None = None
+    kernel_factory: Callable[[dict], Callable[..., Any]] | None = None
+    kernel_params: dict = field(default_factory=dict)
+    kernel_defaults: dict = field(default_factory=dict)
+    # Non-shape configuration baked into ``kernel_factory`` closures
+    # (causal/window/softcap, cache sizes, ...) — part of the sweep cache
+    # key, so nodes with equal input shapes but different behaviour are
+    # tuned separately.
+    kernel_options: dict = field(default_factory=dict)
     # Filled in by LayerGraph.trace():
     out_spec: jax.ShapeDtypeStruct | None = None
 

@@ -1,3 +1,12 @@
-from .ops import decode_attention, flash_attention, ssd_scan
+from .ops import (decode_attention, decode_attention_node, flash_attention,
+                  flash_attention_node, ssd_scan, ssd_scan_node)
+from .substrate import (DEFAULT_CANDIDATES, DEFAULT_PARAMS, KernelAutotuner,
+                        TuneRecord, default_interpret,
+                        normalize_cost_analysis, tpu_compiler_params)
 
-__all__ = ["decode_attention", "flash_attention", "ssd_scan"]
+__all__ = [
+    "decode_attention", "flash_attention", "ssd_scan",
+    "decode_attention_node", "flash_attention_node", "ssd_scan_node",
+    "DEFAULT_CANDIDATES", "DEFAULT_PARAMS", "KernelAutotuner", "TuneRecord",
+    "default_interpret", "normalize_cost_analysis", "tpu_compiler_params",
+]

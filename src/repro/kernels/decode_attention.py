@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .substrate import pad_axis_to, round_up, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -76,13 +78,19 @@ def decode_attention(q, k, v, lengths, *, softcap=None, block_k=256,
 
     Returns (B, H, hd).  All q heads of one kv group are processed together
     as the (G, hd) left operand of each MXU matmul.
+
+    ``Smax`` need not divide ``block_k``: the cache is zero-padded to the
+    next block boundary; padded positions sit past every ``lengths[b]`` and
+    are masked by the existing ``kpos < length`` guard.
     """
     B, H, hd = q.shape
     Smax, Hk = k.shape[1], k.shape[2]
     G = H // Hk
     bk = min(block_k, Smax)
-    assert Smax % bk == 0, (Smax, bk)
-    nk = Smax // bk
+    Smax_p = round_up(Smax, bk)
+    k = pad_axis_to(k, 1, Smax_p)
+    v = pad_axis_to(v, 1, Smax_p)
+    nk = Smax_p // bk
     scale = 1.0 / math.sqrt(hd)
 
     qg = q.reshape(B, Hk, G, hd)
@@ -105,7 +113,7 @@ def decode_attention(q, k, v, lengths, *, softcap=None, block_k=256,
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k, v)

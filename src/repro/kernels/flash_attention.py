@@ -9,6 +9,12 @@ it lands on the MXU.  GQA is handled by indexing the kv head as
 HBM.  Sliding-window and logit-softcap (gemma2) are fused into the score
 path.  Causal q-blocks that lie entirely outside the kv block are skipped
 via ``pl.when`` (block-level masking).
+
+Uneven sequence lengths are handled by the substrate layer: q/k/v are
+zero-padded up to the next block boundary, padded key positions are masked
+to ``-inf`` via ``kpos < k_len``, and padded query rows are sliced off the
+output.  Compiler params resolve through ``substrate.tpu_compiler_params``
+so both old (``TPUCompilerParams``) and new (``CompilerParams``) JAX work.
 """
 
 from __future__ import annotations
@@ -21,12 +27,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .substrate import pad_axis_to, round_up, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, causal: bool, window: int | None,
-            softcap: float | None, bq: int, bk: int, nk: int):
+            softcap: float | None, bq: int, bk: int, nk: int, k_len: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -40,8 +48,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     k_start = ik * bk
 
     # block-level skip: causal => kv blocks entirely in the future contribute
-    # nothing; sliding window => kv blocks entirely before the window too.
-    relevant = jnp.bool_(True)
+    # nothing; sliding window => kv blocks entirely before the window too;
+    # padding => kv blocks entirely past the true key length.
+    relevant = k_start < k_len
     if causal:
         relevant &= k_start <= q_start + bq - 1
     if window is not None:
@@ -60,7 +69,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = jnp.ones((bq, bk), jnp.bool_)
+        mask = kpos < k_len
         if causal:
             mask &= qpos >= kpos
         if window is not None:
@@ -89,21 +98,28 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                                              "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     block_q=128, block_k=128, interpret=False):
-    """q: (B, Sq, H, hd); k, v: (B, Sk, Hk, hd) -> (B, Sq, H, hd)."""
+    """q: (B, Sq, H, hd); k, v: (B, Sk, Hk, hd) -> (B, Sq, H, hd).
+
+    ``Sq``/``Sk`` need not divide the block sizes: inputs are zero-padded to
+    the next block boundary and the pad is masked/sliced away.
+    """
     B, Sq, H, hd = q.shape
     Sk, Hk = k.shape[1], k.shape[2]
     group = H // Hk
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
-    nq, nk = Sq // bq, Sk // bk
+    Sq_p, Sk_p = round_up(Sq, bq), round_up(Sk, bk)
+    q = pad_axis_to(q, 1, Sq_p)
+    k = pad_axis_to(k, 1, Sk_p)
+    v = pad_axis_to(v, 1, Sk_p)
+    nq, nk = Sq_p // bq, Sk_p // bk
     scale = 1.0 / math.sqrt(hd)
 
     grid = (B, H, nq, nk)
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
                                window=window, softcap=softcap, bq=bq, bk=bk,
-                               nk=nk)
-    return pl.pallas_call(
+                               nk=nk, k_len=Sk)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -121,8 +137,9 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :Sq] if Sq_p != Sq else out

@@ -1,26 +1,32 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers for the Pallas kernels + tunable graph nodes.
 
-``interpret`` defaults to True off-TPU so the same call sites work in CPU
-tests/examples; on TPU backends the kernels compile through Mosaic.
+``interpret`` defaults to True off-TPU (via ``substrate.default_interpret``)
+so the same call sites work in CPU tests/examples; on TPU backends the
+kernels compile through Mosaic.
+
+The ``*_node`` builders wrap each kernel as a ``LayerNode`` carrying the
+substrate autotuner metadata (``kernel``, ``kernel_factory``,
+``kernel_params``): benchmark providers constructed with a
+:class:`~repro.kernels.substrate.KernelAutotuner` sweep block sizes for
+these nodes before timing them, so partition decisions are made from tuned,
+not default, kernel timings.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .flash_attention import flash_attention as _flash
 from .decode_attention import decode_attention as _decode
 from .ssd_scan import ssd_scan as _ssd
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .substrate import DEFAULT_PARAMS, default_interpret
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     block_q=128, block_k=128, interpret=None):
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
                   block_q=block_q, block_k=block_k, interpret=interpret)
 
@@ -28,12 +34,88 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
 def decode_attention(q, k, v, lengths, *, softcap=None, block_k=256,
                      interpret=None):
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     return _decode(q, k, v, lengths, softcap=softcap, block_k=block_k,
                    interpret=interpret)
 
 
 def ssd_scan(x, log_a, b, c, *, chunk=128, interpret=None):
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     return _ssd(x, log_a, b, c, chunk=chunk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Tunable LayerNode builders (autotuner integration)
+# ---------------------------------------------------------------------------
+
+def _layer_node(name, kind, kernel, factory, params, options, flops=0.0):
+    from repro.core.graph import LayerNode  # lazy: core imports substrate
+    params = dict(DEFAULT_PARAMS[kernel], **(params or {}))
+    return LayerNode(name=name, kind=kind, apply=factory(params),
+                     flops=flops, kernel=kernel, kernel_factory=factory,
+                     kernel_params=params, kernel_defaults=dict(params),
+                     kernel_options={k: v for k, v in options.items()
+                                     if v is not None})
+
+
+def flash_attention_node(name="flash_attention", *, causal=True, window=None,
+                         softcap=None, params=None, interpret=None):
+    """Self-attention layer over an (B, S, H, hd) activation (q = k = v)."""
+
+    def factory(p):
+        def apply(x):
+            return flash_attention(x, x, x, causal=causal, window=window,
+                                   softcap=softcap, block_q=p["block_q"],
+                                   block_k=p["block_k"], interpret=interpret)
+        return apply
+
+    return _layer_node(name, "attention", "flash_attention", factory, params,
+                       {"causal": causal, "window": window,
+                        "softcap": softcap})
+
+
+def decode_attention_node(name="decode_attention", *, cache_len, kv_heads,
+                          head_dim, batch=1, softcap=None, params=None,
+                          interpret=None, seed=0):
+    """Decode step over a fixed synthetic (cache_len, kv_heads, head_dim) KV
+    cache; the node input is the (batch, H, hd) query batch.
+
+    The cache is materialised once here (a jit constant), so timed runs
+    measure only the attention kernel — not cache generation.
+    """
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    kc = jax.random.normal(ks[0], (batch, cache_len, kv_heads, head_dim))
+    vc = jax.random.normal(ks[1], (batch, cache_len, kv_heads, head_dim))
+    lengths = jnp.full((batch,), cache_len, jnp.int32)
+
+    def factory(p):
+        def apply(q):
+            return decode_attention(q, kc.astype(q.dtype),
+                                    vc.astype(q.dtype), lengths,
+                                    softcap=softcap, block_k=p["block_k"],
+                                    interpret=interpret)
+        return apply
+
+    return _layer_node(name, "attention", "decode_attention", factory, params,
+                       {"cache_len": cache_len, "kv_heads": kv_heads,
+                        "head_dim": head_dim, "softcap": softcap,
+                        "seed": seed})
+
+
+def ssd_scan_node(name="ssd_scan", *, state_dim=16, params=None,
+                  interpret=None):
+    """SSD mixer over an (B, S, H, P) activation; B/C projections are cheap
+    slices of the input so the node stays single-input."""
+
+    def factory(p):
+        def apply(x):
+            log_a = -jax.nn.softplus(x.mean(axis=-1))
+            bc = x[..., :state_dim]
+            y, _ = ssd_scan(x, log_a, bc, bc, chunk=p["chunk"],
+                            interpret=interpret)
+            return y
+        return apply
+
+    return _layer_node(name, "ssm", "ssd_scan", factory, params,
+                       {"state_dim": state_dim})

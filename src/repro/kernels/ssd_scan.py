@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .substrate import pad_axis_to, round_up, tpu_compiler_params
+
 
 def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_scr, *,
             L: int, nc: int):
@@ -70,12 +72,21 @@ def ssd_scan(x, log_a, b, c, *, chunk=128, interpret=False):
     """x: (B, S, H, P); log_a: (B, S, H); b, c: (B, S, H, N).
 
     Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32).
+
+    ``S`` need not divide the chunk length: inputs are zero-padded to the
+    next chunk boundary.  Padded steps carry ``log_a = 0`` and ``x = b = 0``,
+    so the recurrence ``state <- state·exp(0) + 0`` leaves the final state
+    untouched; padded output rows are sliced away.
     """
     B, S, H, P = x.shape
     N = b.shape[-1]
     L = min(chunk, S)
-    assert S % L == 0, (S, L)
-    nc = S // L
+    S_p = round_up(S, L)
+    x = pad_axis_to(x, 1, S_p)
+    log_a = pad_axis_to(log_a, 1, S_p)
+    b = pad_axis_to(b, 1, S_p)
+    c = pad_axis_to(c, 1, S_p)
+    nc = S_p // L
 
     grid = (B, H, nc)
     kernel = functools.partial(_kernel, L=L, nc=nc)
@@ -97,8 +108,8 @@ def ssd_scan(x, log_a, b, c, *, chunk=128, interpret=False):
             jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, log_a, b, c)
-    return y, fin
+    return (y[:, :S] if S_p != S else y), fin

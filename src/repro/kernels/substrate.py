@@ -1,0 +1,383 @@
+"""Version-portable substrate under the Pallas TPU kernels.
+
+All three kernels (``flash_attention``, ``decode_attention``, ``ssd_scan``)
+and the measurement layer (``core/bench.py``, ``launch/dryrun.py``) route
+through this module instead of touching version-sensitive JAX surfaces
+directly.  It provides:
+
+* **Compiler-params compat shim** — JAX renamed
+  ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across releases;
+  :func:`tpu_compiler_params` resolves whichever the installed JAX exposes
+  (and silently drops keyword arguments the resolved class does not accept),
+  so the same kernel source compiles on both old and new JAX.
+* **Cost-analysis normalizer** — ``jit(...).lower().compile()
+  .cost_analysis()`` returns a plain dict on some JAX versions and a
+  list-of-dicts (one per computation) on others;
+  :func:`normalize_cost_analysis` collapses either form into one flat
+  ``{metric: float}`` dict so providers can always call ``.get``.
+* **Pad-and-mask helpers** — :func:`round_up` / :func:`pad_axis_to` let the
+  kernels accept sequence lengths that are not multiples of the block size:
+  inputs are zero-padded up to the next block boundary, padded key/value
+  positions are masked to ``-inf`` inside the kernel, and padded query/time
+  rows are sliced off the output.
+* **Block-size autotuner** — :class:`KernelAutotuner` sweeps
+  ``(block_q, block_k, chunk)`` candidates per (kernel, shape, resource),
+  caches the winner, and rewrites tunable graph nodes in place so the
+  benchmark providers measure *tuned* kernel timings.  Winners are carried
+  into ``BenchmarkDB`` records (``BlockBenchmark.tuned_params``), which is
+  what the partition/query engines consume.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field, asdict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# compiler-params compat shim
+# ---------------------------------------------------------------------------
+
+_COMPILER_PARAMS_NAMES = ("CompilerParams", "TPUCompilerParams")
+
+
+def resolve_compiler_params_cls():
+    """Return the TPU compiler-params class of the installed JAX, or None.
+
+    Newer JAX exposes ``pltpu.CompilerParams``; older releases call it
+    ``pltpu.TPUCompilerParams``.  Returns ``None`` when the Pallas TPU
+    extension is unavailable entirely (pure-CPU builds) — ``pallas_call``
+    accepts ``compiler_params=None``.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas always present here
+        return None
+    for name in _COMPILER_PARAMS_NAMES:
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+def _accepted_fields(cls) -> set[str]:
+    fields = getattr(cls, "__dataclass_fields__", None)
+    if fields:
+        return set(fields)
+    init = getattr(cls, "__init__", None)
+    code = getattr(init, "__code__", None)
+    if code is not None:
+        return set(code.co_varnames[1:code.co_argcount + code.co_kwonlyargcount])
+    return set()
+
+
+def tpu_compiler_params(**kwargs):
+    """Instantiate TPU compiler params portably.
+
+    Unknown keyword arguments (fields added/removed between JAX versions)
+    are dropped rather than raising, so kernels can always request e.g.
+    ``dimension_semantics`` without guarding on the JAX version.
+    """
+    cls = resolve_compiler_params_cls()
+    if cls is None:
+        return None
+    accepted = _accepted_fields(cls)
+    if accepted:
+        kwargs = {k: v for k, v in kwargs.items() if k in accepted}
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# cost-analysis normalizer
+# ---------------------------------------------------------------------------
+
+def normalize_cost_analysis(cost: Any) -> dict[str, float]:
+    """Collapse any ``compile().cost_analysis()`` return into one flat dict.
+
+    Handles the three shapes seen across JAX versions/backends:
+
+    * ``dict``                       -> copied through;
+    * ``list``/``tuple`` of dicts    -> numeric entries summed per key
+      (one dict per computation; summing is the per-module total);
+    * ``None`` / anything else      -> ``{}``.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    if isinstance(cost, (list, tuple)):
+        out: dict[str, float] = {}
+        for entry in cost:
+            if not isinstance(entry, dict):
+                continue
+            for k, v in entry.items():
+                if isinstance(v, (int, float)):
+                    out[k] = out.get(k, 0.0) + float(v)
+        return out
+    return {}
+
+
+def compiled_costs(compiled) -> dict[str, float]:
+    """``normalize_cost_analysis`` straight off a compiled executable."""
+    return normalize_cost_analysis(compiled.cost_analysis())
+
+
+# ---------------------------------------------------------------------------
+# interpret default + pad/mask helpers
+# ---------------------------------------------------------------------------
+
+def default_interpret() -> bool:
+    """Pallas kernels interpret on non-TPU backends so the same call sites
+    work in CPU tests/examples; on TPU they compile through Mosaic."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(n: int, multiple: int) -> int:
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def pad_axis_to(x, axis: int, target: int):
+    """Zero-pad ``x`` along ``axis`` up to length ``target`` (no-op when
+    already there)."""
+    size = x.shape[axis]
+    if size == target:
+        return x
+    if size > target:
+        raise ValueError(f"cannot pad axis {axis} from {size} down to {target}")
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# block-size autotuner
+# ---------------------------------------------------------------------------
+
+# Candidate sweeps per kernel.  Defaults (the kernels' keyword defaults) are
+# always included so "tuned == default" is an observable outcome.
+DEFAULT_CANDIDATES: dict[str, list[dict[str, int]]] = {
+    "flash_attention": [{"block_q": bq, "block_k": bk}
+                        for bq in (64, 128, 256)
+                        for bk in (64, 128, 256)],
+    "decode_attention": [{"block_k": bk} for bk in (128, 256, 512)],
+    "ssd_scan": [{"chunk": c} for c in (32, 64, 128, 256)],
+}
+
+DEFAULT_PARAMS: dict[str, dict[str, int]] = {
+    "flash_attention": {"block_q": 128, "block_k": 128},
+    "decode_attention": {"block_k": 256},
+    "ssd_scan": {"chunk": 128},
+}
+
+
+@dataclass
+class TuneRecord:
+    """Outcome of one (kernel, shape, resource) sweep."""
+
+    kernel: str
+    shape_key: str
+    resource: str
+    params: dict[str, int]            # winning block sizes
+    time_s: float                     # winner's measured time
+    default_params: dict[str, int]
+    default_time_s: float               # NaN when the default never compiled
+    trials: dict[str, float] = field(default_factory=dict)  # json(params) -> s
+
+    @property
+    def changed_default(self) -> bool:
+        return self.params != self.default_params
+
+    @property
+    def speedup_vs_default(self) -> float:
+        # default_time_s is NaN when the default candidate never compiled
+        # on this JAX version — no meaningful baseline, report parity.
+        if not self.time_s or math.isnan(self.default_time_s):
+            return 1.0
+        return self.default_time_s / self.time_s
+
+
+def _shape_key(specs) -> str:
+    parts = []
+    for s in jax.tree.leaves(specs):
+        shape = getattr(s, "shape", None)
+        dtype = getattr(s, "dtype", None)
+        parts.append(f"{jnp.dtype(dtype).name if dtype is not None else '?'}"
+                     f"{list(shape) if shape is not None else '?'}")
+    return "x".join(parts)
+
+
+class KernelAutotuner:
+    """Sweeps block-size candidates and caches per-(kernel, shape, resource)
+    winners.
+
+    ``tune`` measures wall-clock of a jit'd candidate callable (min over
+    ``runs`` after a compile warm-up) — the same measurement discipline as
+    ``TimingProvider``.  Candidates that fail to trace/compile (e.g. an
+    unsupported block shape) are skipped, which keeps sweeps safe across JAX
+    versions.  A custom ``measure`` hook replaces wall-clock timing (used by
+    unit tests and by roofline-style offline tuning).
+    """
+
+    def __init__(self, candidates: dict[str, list[dict[str, int]]] | None = None,
+                 runs: int = 2,
+                 measure: Callable[[Callable, tuple], float] | None = None):
+        self.candidates = dict(DEFAULT_CANDIDATES)
+        if candidates:
+            self.candidates.update(candidates)
+        self.runs = runs
+        self.measure = measure
+        self.records: dict[tuple[str, str, str], TuneRecord] = {}
+        # Measurements are host wall-clock and independent of the emulated
+        # resource (speed factors scale uniformly), so trial tables are
+        # shared across resources; each resource still gets its own record.
+        self._trials: dict[tuple[str, str], dict[str, float]] = {}
+
+    # -- measurement --------------------------------------------------------
+    def _time_candidate(self, fn: Callable, args: tuple) -> float:
+        if self.measure is not None:
+            return self.measure(fn, args)
+        jf = jax.jit(fn)
+        out = jf(*args)             # warm-up / compile
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(max(1, self.runs)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jf(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # -- core sweep ---------------------------------------------------------
+    def tune(self, kernel: str, factory: Callable[[dict[str, int]], Callable],
+             args: tuple, *, resource: str = "host",
+             defaults: dict[str, int] | None = None,
+             shape_key: str | None = None,
+             config_key: str = "") -> TuneRecord:
+        """Sweep candidates for ``kernel`` at the shapes of ``args``.
+
+        ``factory(params)`` returns the callable to measure.  ``config_key``
+        distinguishes factories whose behaviour differs beyond the argument
+        shapes (causal/window/softcap, closed-over cache sizes, ...).  The
+        winning record is cached per (kernel, shape+config, resource), and
+        the underlying trial table is shared across resources — mirroring
+        ``BenchmarkDB``'s benchmark-once/query-many contract.
+        """
+        defaults = dict(defaults or DEFAULT_PARAMS.get(kernel, {}))
+        shape_key = shape_key or _shape_key(
+            [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args])
+        if config_key:
+            shape_key = f"{shape_key}|{config_key}"
+        key = (kernel, shape_key, resource)
+        if key in self.records:
+            return self.records[key]
+
+        candidates = list(self.candidates.get(kernel, []))
+        if defaults and defaults not in candidates:
+            candidates.insert(0, defaults)
+        if not candidates:
+            candidates = [defaults]
+
+        trials = self._trials.get((kernel, shape_key))
+        if trials is None:
+            trials = {}
+            for params in candidates:
+                try:
+                    t = self._time_candidate(factory(params), args)
+                except Exception:   # unsupported block shape on this version
+                    continue
+                trials[json.dumps(params, sort_keys=True)] = t
+            if not trials:
+                raise RuntimeError(
+                    f"autotune: every candidate failed for {kernel} "
+                    f"{shape_key}")
+            self._trials[(kernel, shape_key)] = trials
+
+        best_key = min(trials, key=trials.get)
+        best = json.loads(best_key)
+        dkey = json.dumps(defaults, sort_keys=True)
+        rec = TuneRecord(kernel=kernel, shape_key=shape_key, resource=resource,
+                         params=best, time_s=trials[best_key],
+                         default_params=defaults,
+                         default_time_s=trials.get(dkey, float("nan")),
+                         trials=trials)
+        self.records[key] = rec
+        return rec
+
+    # -- graph integration --------------------------------------------------
+    def tune_node(self, node, resource: str = "host",
+                  in_specs=None) -> TuneRecord | None:
+        """Tune one kernel-bearing ``LayerNode`` in place.
+
+        Nodes opt in by carrying ``kernel`` (substrate kernel name),
+        ``kernel_factory`` (params -> apply callable) and optionally
+        ``kernel_params`` (defaults).  ``in_specs`` are the node's input
+        ShapeDtypeStructs (``tune_block`` derives them from the graph).
+        The node's ``apply`` is rewritten to the tuned callable, so any
+        provider measuring the node afterwards measures tuned timings.
+        """
+        kernel = getattr(node, "kernel", None)
+        factory = getattr(node, "kernel_factory", None)
+        if not kernel or factory is None:
+            return None
+        args = tuple(jnp.zeros(s.shape, s.dtype)
+                     for s in (in_specs or []))
+        if not args:
+            return None
+        options = getattr(node, "kernel_options", None)
+        rec = self.tune(kernel, factory, args, resource=resource,
+                        defaults=getattr(node, "kernel_defaults", None)
+                        or DEFAULT_PARAMS.get(kernel),
+                        config_key=json.dumps(options, sort_keys=True,
+                                              default=str)
+                        if options else "")
+        node.kernel_params = dict(rec.params)
+        node.apply = factory(rec.params)
+        return rec
+
+    def tune_block(self, block, resource: str = "host") -> list[TuneRecord]:
+        """Tune every kernel node of a fused block (providers call this right
+        before measuring the block)."""
+        out = []
+        g = block.graph
+        for i in block.node_ids:
+            node = g.nodes[i]
+            if getattr(node, "kernel", None) and \
+                    getattr(node, "kernel_factory", None) is not None:
+                specs = [g.nodes[p].out_spec for p in g.preds[i]]
+                rec = self.tune_node(node, resource=resource, in_specs=specs)
+                if rec is not None:
+                    out.append(rec)
+        return out
+
+    def params_for_block(self, block) -> dict[str, dict[str, int]]:
+        """Winning block sizes per kernel node of ``block`` (for embedding
+        into ``BlockBenchmark.tuned_params``)."""
+        out: dict[str, dict[str, int]] = {}
+        for i in block.node_ids:
+            node = block.graph.nodes[i]
+            if getattr(node, "kernel", None) and \
+                    getattr(node, "kernel_params", None):
+                out[node.name] = dict(node.kernel_params)
+        return out
+
+    # -- persistence --------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps([asdict(r) for r in self.records.values()])
+
+    @classmethod
+    def from_json(cls, s: str) -> "KernelAutotuner":
+        tuner = cls()
+        for d in json.loads(s):
+            rec = TuneRecord(**d)
+            tuner.records[(rec.kernel, rec.shape_key, rec.resource)] = rec
+        return tuner

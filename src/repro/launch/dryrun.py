@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ALL_SHAPES, ShapeConfig, shape_by_name
+from repro.kernels.substrate import compiled_costs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (input_specs, make_decode_step,
                                 make_prefill_step, make_train_step,
@@ -146,10 +147,10 @@ def run_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                 return jitted.lower(*args).compile()
 
         def costs(compiled):
-            cost = compiled.cost_analysis()
+            cost = compiled_costs(compiled)
             coll = collective_bytes(compiled.as_text())
-            return (float(cost.get("flops", 0.0)),
-                    float(cost.get("bytes accessed", 0.0)), coll)
+            return (cost.get("flops", 0.0),
+                    cost.get("bytes accessed", 0.0), coll)
 
         full_cfg = get_config(arch)
         compiled = compile_cfg(full_cfg)

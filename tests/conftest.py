@@ -1,0 +1,33 @@
+"""Shared test configuration.
+
+Provides a fallback implementation of the ``flaky(reruns=N)`` mark for
+environments where ``pytest-rerunfailures`` is not installed (the container
+running tier-1 has no network access): marked tests are re-run up to N times
+and only the final attempt is reported.  When the real plugin is present it
+takes over and this hook stands down.
+"""
+
+from _pytest.runner import runtestprotocol
+
+
+def _has_rerun_plugin(config) -> bool:
+    return config.pluginmanager.hasplugin("rerunfailures")
+
+
+def pytest_runtest_protocol(item, nextitem):
+    marker = item.get_closest_marker("flaky")
+    if marker is None or _has_rerun_plugin(item.config):
+        return None
+    reruns = int(marker.kwargs.get("reruns",
+                                   marker.args[0] if marker.args else 1))
+    item.ihook.pytest_runtest_logstart(nodeid=item.nodeid,
+                                       location=item.location)
+    for attempt in range(reruns + 1):
+        reports = runtestprotocol(item, nextitem=nextitem, log=False)
+        if not any(r.failed for r in reports) or attempt == reruns:
+            for r in reports:
+                item.ihook.pytest_runtest_logreport(report=r)
+            break
+    item.ihook.pytest_runtest_logfinish(nodeid=item.nodeid,
+                                        location=item.location)
+    return True
