@@ -1,11 +1,23 @@
 """Figures 6-15 + Table IV reproduction: Scission decisions under network
-conditions, input sizes, constraints, pipelines, and top-N rankings."""
+conditions, input sizes, constraints, pipelines, and top-N rankings — plus
+the beyond-paper pipelined-serving scenarios: throughput-optimal partitions
+(predicted vs. simulated) and Pareto-front queries.
+
+Run standalone in smoke mode for CI::
+
+    PYTHONPATH=src python -m benchmarks.bench_partitions --smoke \
+        --out results/bench_partitions_smoke.json
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
-from repro.core import Query, LATENCY
+from repro.core import Query, LATENCY, THROUGHPUT
+from repro.serving.engine import simulate_pipeline_throughput
 
 from .common import benchmark_cached, scission_for, testbed
 
@@ -110,6 +122,62 @@ def scenario_topn(quick=True):
     return rows
 
 
+def scenario_throughput(quick=True, models=None):
+    """Beyond-paper: throughput-optimal partition per network condition,
+    with the cost-model prediction validated against a pipelined-serving
+    simulation (steady-state rate of the bottleneck stage).  Validation
+    failures accumulate in ``scenario_throughput.failures`` so smoke mode
+    can turn them into a non-zero exit code."""
+    print("\n# Pipelined serving — predicted vs simulated throughput")
+    scenario_throughput.failures = []
+    rows = []
+    models = models or (["ResNet50", "MobileNetV2"] if quick else
+                        ["VGG19", "ResNet50", "MobileNetV2"])
+    for net in ("3g", "4g", "wired"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m)
+            res = s.query(m, Query(top_n=1, objective=THROUGHPUT))
+            best = res.best
+            pred = best.throughput_rps
+            t0 = time.perf_counter()
+            sim = simulate_pipeline_throughput(best, n_requests=256)
+            sim_us = (time.perf_counter() - t0) * 1e6
+            err = abs(sim - pred) / pred if pred > 0 else 0.0
+            ok = "PASS" if err < 0.02 else "FAIL"
+            if ok == "FAIL":
+                scenario_throughput.failures.append(f"{net}/{m}")
+            print(f"  [{net}] {m}: pred={pred:8.2f}rps sim={sim:8.2f}rps "
+                  f"err={err * 100:.2f}% {ok}  {best.describe()}")
+            rows.append((f"thpt/{net}/{m}", res.query_time_s * 1e6,
+                         round(pred, 3)))
+            rows.append((f"thpt_sim/{net}/{m}", sim_us, round(sim, 3)))
+    return rows
+
+
+scenario_throughput.failures = []
+
+
+def scenario_frontier(quick=True, models=None):
+    """Beyond-paper: Pareto front over (latency, throughput, transfer) —
+    the operating points a deployment actually chooses between."""
+    print("\n# Pareto frontier — (latency, throughput, transfer)")
+    rows = []
+    models = models or ["ResNet50"]
+    for net in ("3g", "wired") if quick else ("3g", "4g", "wired"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m)
+            res = s.frontier(m)
+            print(f"  [{net}] {m}: {len(res.configs)} non-dominated configs "
+                  f"({res.strategy}, {res.query_time_s * 1e3:.1f}ms)")
+            for cfg in res.configs[:3]:
+                print(f"    {cfg.describe()}")
+            rows.append((f"front/{net}/{m}", res.query_time_s * 1e6,
+                         len(res.configs)))
+    return rows
+
+
 def run(quick: bool = True):
     rows = []
     rows += scenario_network(quick)
@@ -117,4 +185,49 @@ def run(quick: bool = True):
     rows += scenario_constraints(quick)
     rows += scenario_pipelines(quick)
     rows += scenario_topn(quick)
+    rows += scenario_throughput(quick)
+    rows += scenario_frontier(quick)
     return rows
+
+
+def smoke():
+    """Minimal single-model pass for CI: one CNN, all three network
+    conditions, exercising the latency, throughput and frontier query
+    paths.  Returns JSON-serialisable rows."""
+    rows = []
+    rows += scenario_throughput(quick=True, models=["MobileNetV2"])
+    rows += scenario_frontier(quick=True, models=["MobileNetV2"])
+    s = scenario_network._cache.setdefault("wired", scission_for("wired"))
+    benchmark_cached(s, "MobileNetV2")
+    best, qt = _best(s, "MobileNetV2")
+    rows.append(("smoke/latency/MobileNetV2", qt * 1e6,
+                 round(best.latency_s, 4)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-model CI pass (fastest)")
+    ap.add_argument("--full", action="store_true", help="all models")
+    ap.add_argument("--out", default=None,
+                    help="write rows as JSON to this path")
+    args = ap.parse_args()
+    rows = smoke() if args.smoke else run(quick=not args.full)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in rows], f, indent=2)
+        print(f"wrote {args.out}")
+    if scenario_throughput.failures:
+        print(f"FAILED predicted-vs-simulated throughput validation: "
+              f"{', '.join(scenario_throughput.failures)}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

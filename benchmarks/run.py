@@ -35,6 +35,11 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
+    if bench_partitions.scenario_throughput.failures:
+        print("FAILED predicted-vs-simulated throughput validation: "
+              + ", ".join(bench_partitions.scenario_throughput.failures))
+        sys.exit(1)
+
 
 if __name__ == "__main__":
     main()

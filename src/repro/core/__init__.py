@@ -9,8 +9,10 @@ from .network import (Link, NetworkModel, THREE_G, FOUR_G, WIRED, EDGE_CLOUD,
 from .bench import (BenchmarkDB, BlockBenchmark, TimingProvider,
                     CompiledCostProvider, AnalyticProvider, benchmark_model)
 from .partition import (Segment, PartitionConfig, CostModel, Objective,
-                        LATENCY, TRANSFER, Constraints, PartitionLattice,
-                        enumerate_partitions, ordered_pipelines, rank)
+                        ThroughputObjective, LATENCY, TRANSFER, THROUGHPUT,
+                        Constraints, PartitionLattice, BottleneckLattice,
+                        enumerate_partitions, ordered_pipelines, rank,
+                        pareto_frontier, dominates)
 from .query import Query, QueryEngine, QueryResult
 from .planner import Scission
 
@@ -22,8 +24,10 @@ __all__ = [
     "ICI", "DCN", "paper_network", "tpu_network",
     "BenchmarkDB", "BlockBenchmark", "TimingProvider", "CompiledCostProvider",
     "AnalyticProvider", "benchmark_model",
-    "Segment", "PartitionConfig", "CostModel", "Objective", "LATENCY",
-    "TRANSFER", "Constraints", "PartitionLattice", "enumerate_partitions",
-    "ordered_pipelines", "rank",
+    "Segment", "PartitionConfig", "CostModel", "Objective",
+    "ThroughputObjective", "LATENCY", "TRANSFER", "THROUGHPUT",
+    "Constraints", "PartitionLattice", "BottleneckLattice",
+    "enumerate_partitions", "ordered_pipelines", "rank",
+    "pareto_frontier", "dominates",
     "Query", "QueryEngine", "QueryResult", "Scission",
 ]

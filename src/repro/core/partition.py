@@ -12,12 +12,25 @@ Two engines over the same cost model:
   procedure scale from the paper's 3-tier testbed to a 1000+-node fleet,
   and what keeps re-planning (elastic runtime) inside the paper's 50 ms
   query budget.
+* :class:`BottleneckLattice` — the exact min-bottleneck (max-throughput)
+  companion DP.  Under steady-state pipelined serving the objective is the
+  *max* over stage/hop times, not their sum, so the additive Viterbi
+  lattice is not exact; this DP works at segment granularity with minimax
+  composition instead.
 
 Cost model (paper's two assumptions, validated in tests/test_bench.py):
 
     latency(config) = comm(source -> r_1, input_bytes)
                     + Σ_segments Σ_blocks time(r_i, b)
                     + Σ_cuts     comm(r_i -> r_{i+1}, out_bytes[cut])
+
+Pipelined-serving model (streamed deployments): with one request in
+flight per stage, the steady-state rate is limited by the slowest stage —
+either a compute segment or a communication hop (including the
+source->first-resource input hop):
+
+    bottleneck(config) = max(input_comm, stage_compute_i, hop_comm_j)
+    throughput_rps     = 1 / bottleneck
 """
 
 from __future__ import annotations
@@ -52,6 +65,10 @@ class PartitionConfig:
     comm_s: float
     transfer_bytes: float           # total inter-resource bytes (incl. input)
     input_comm_s: float = 0.0
+    # per-stage timings for pipelined serving: one compute time per segment,
+    # one comm time per hop between consecutive segments
+    stage_compute_s: tuple[float, ...] = ()
+    stage_comm_s: tuple[float, ...] = ()
 
     @property
     def resources(self) -> tuple[str, ...]:
@@ -61,11 +78,27 @@ class PartitionConfig:
     def is_native(self) -> bool:
         return len(self.segments) == 1
 
+    @property
+    def bottleneck_s(self) -> float:
+        """Slowest pipeline stage (compute segment, inter-stage hop, or the
+        input hop) — the steady-state period under pipelined serving."""
+        stages = [*self.stage_compute_s, *self.stage_comm_s]
+        if self.input_comm_s > 0.0:
+            stages.append(self.input_comm_s)
+        return max(stages) if stages else self.latency_s
+
+    @property
+    def throughput_rps(self) -> float:
+        """Steady-state pipelined request rate = 1 / bottleneck stage."""
+        b = self.bottleneck_s
+        return 1.0 / b if b > 0.0 else float("inf")
+
     def describe(self) -> str:
         parts = [f"{s.resource}: {s.start}-{s.end}" if s.start != s.end
                  else f"{s.resource}: {s.start}" for s in self.segments]
         return (f"[{self.model}] " + " | ".join(parts)
                 + f"  latency={self.latency_s * 1e3:.1f}ms"
+                + f" thpt={self.throughput_rps:.1f}rps"
                 + f" transfer={self.transfer_bytes / 1e6:.3f}MB")
 
 
@@ -85,6 +118,12 @@ class CostModel:
 
     def __post_init__(self):
         names = [r.name for r in self.resources]
+        missing = [n for n in names if n not in self.db.records]
+        if missing:
+            raise ValueError(
+                f"resource(s) {', '.join(sorted(missing))} not benchmarked "
+                f"for model {self.db.model!r}; run Scission.benchmark() / "
+                "benchmark_resource() for them first")
         self.times = self.db.times_matrix(names)
         self.cum = np.concatenate(
             [np.zeros((len(names), 1)), np.cumsum(self.times, axis=1)], axis=1)
@@ -112,18 +151,25 @@ class CostModel:
         if first != self.source:
             input_comm = self.comm(self.source, first, self.input_bytes)
             xfer += self.input_bytes
+        stage_compute: list[float] = []
+        stage_comm: list[float] = []
         for k, seg in enumerate(segments):
-            compute[seg.resource] = compute.get(seg.resource, 0.0) + \
-                self.segment_time(seg.resource, seg.start, seg.end)
+            t = self.segment_time(seg.resource, seg.start, seg.end)
+            compute[seg.resource] = compute.get(seg.resource, 0.0) + t
+            stage_compute.append(t)
             if k + 1 < len(segments):
                 nbytes = float(self.out_bytes[seg.end])
-                comm += self.comm(seg.resource, segments[k + 1].resource, nbytes)
+                hop = self.comm(seg.resource, segments[k + 1].resource, nbytes)
+                stage_comm.append(hop)
+                comm += hop
                 xfer += nbytes
         latency = input_comm + sum(compute.values()) + comm
         return PartitionConfig(
             model=self.db.model, segments=tuple(segments), latency_s=latency,
             compute_s=compute, comm_s=comm, transfer_bytes=xfer,
-            input_comm_s=input_comm)
+            input_comm_s=input_comm,
+            stage_compute_s=tuple(stage_compute),
+            stage_comm_s=tuple(stage_comm))
 
 
 @dataclass(frozen=True)
@@ -142,8 +188,23 @@ class Objective:
                 + self.w_transfer_per_mb * cfg.transfer_bytes / 1e6)
 
 
+@dataclass(frozen=True)
+class ThroughputObjective(Objective):
+    """Maximise steady-state pipelined throughput == minimise the bottleneck
+    stage time (max of stage compute and per-hop comm).
+
+    Because the score is a *max* rather than a sum, the additive
+    :class:`PartitionLattice` is not exact for this objective — the query
+    engine dispatches it to :class:`BottleneckLattice` instead.
+    """
+
+    def score(self, cfg: PartitionConfig) -> float:
+        return cfg.bottleneck_s
+
+
 LATENCY = Objective()
 TRANSFER = Objective(w_latency=0.0, w_transfer_per_mb=1.0)
+THROUGHPUT = ThroughputObjective()
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +257,48 @@ def enumerate_partitions(cost: CostModel,
 def rank(configs: list[PartitionConfig], objective: Objective = LATENCY,
          top_n: int | None = None) -> list[PartitionConfig]:
     out = sorted(configs, key=objective.score)
-    return out[:top_n] if top_n else out
+    return out if top_n is None else out[:top_n]
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier over (latency, throughput, transfer)
+# ---------------------------------------------------------------------------
+
+def _objective_vector(cfg: PartitionConfig) -> tuple[float, float, float]:
+    # all three minimised: bottleneck_s stands in for -throughput
+    return (cfg.latency_s, cfg.bottleneck_s, cfg.transfer_bytes)
+
+
+def dominates(a: PartitionConfig, b: PartitionConfig) -> bool:
+    """True iff ``a`` is no worse than ``b`` on latency, throughput and
+    transfer, and strictly better on at least one."""
+    va, vb = _objective_vector(a), _objective_vector(b)
+    return all(x <= y for x, y in zip(va, vb)) and va != vb
+
+
+def pareto_frontier(configs: Sequence[PartitionConfig]
+                    ) -> list[PartitionConfig]:
+    """Exact non-dominated set over (latency, throughput, transfer).
+
+    Processes candidates in lexicographic objective order so each point only
+    needs checking against already-accepted frontier members (any dominator
+    of p is itself dominated only by points that dominate p, and sorts
+    before p).  Configs with identical objective vectors are all kept —
+    they are distinct operating points with equal cost.
+    """
+    if not configs:
+        return []
+    order = sorted(range(len(configs)),
+                   key=lambda i: _objective_vector(configs[i]))
+    front: list[int] = []
+    pts = [_objective_vector(c) for c in configs]
+    for i in order:
+        p = pts[i]
+        if any(all(x <= y for x, y in zip(pts[j], p)) and pts[j] != p
+               for j in front):
+            continue
+        front.append(i)
+    return [configs[i] for i in front]
 
 
 # ---------------------------------------------------------------------------
@@ -350,7 +452,7 @@ class PartitionLattice:
                 out.append(cfg)
             if len(out) >= top_n:
                 break
-        return out
+        return out[:top_n]
 
     @staticmethod
     def _reconstruct(entry) -> tuple[Segment, ...]:
@@ -367,3 +469,145 @@ class PartitionLattice:
                 segs.append(Segment(path[start], start, i - 1))
                 start = i
         return tuple(segs)
+
+
+class BottleneckLattice:
+    """Exact min-bottleneck (max-throughput) DP — the minimax companion to
+    :class:`PartitionLattice`.
+
+    Under pipelined serving the objective is ``max`` over stage compute and
+    hop comm times, which is not additive, so the Viterbi lattice's
+    sum-composition is not exact.  This DP works at *segment* granularity:
+
+        f(b, r, need) = k-best achievable bottlenecks over blocks b..B-1
+                        when block b starts a new segment on resource r and
+                        ``need`` is the set of must-use resources still owed
+
+    with minimax composition ``max(segment_time, hop_time, child)``.  Max is
+    monotone in the child value, so k-best per state is exact.  Complexity
+    O(B²·R²·K·2^M) for M must-use resources.
+
+    Like :class:`PartitionLattice`, the path-dependent constraints
+    (``max_resource_time``, ``min_blocks_on``) are not part of the DP state;
+    they are enforced by post-filtering the k-best pool, which is widened
+    when such a constraint is present but remains an approximation: a
+    constraint binding enough to reject the whole pool yields fewer (or no)
+    results rather than a suboptimal-but-feasible one.
+    """
+
+    def __init__(self, cost: CostModel,
+                 constraints: Constraints | None = None):
+        self.cost = cost
+        self.cons = constraints or Constraints()
+        self.res = [r for r in cost.resources if r.name not in self.cons.exclude]
+        self.names = [r.name for r in self.res]
+        self.order = {r.name: r.order for r in self.res}
+        self.must = [n for n in self.cons.must_use if n in self.names]
+        self.must_idx = {n: i for i, n in enumerate(self.must)}
+        self.full_mask = (1 << len(self.must)) - 1
+
+    def _bit(self, resource: str) -> int:
+        i = self.must_idx.get(resource)
+        return 0 if i is None else 1 << i
+
+    def solve(self, top_n: int = 1) -> list[PartitionConfig]:
+        B = self.cost.n_blocks
+        K = max(top_n * 4, top_n + 4)   # head-room for path-feasibility filter
+        if self.cons.max_resource_time or self.cons.min_blocks_on:
+            # path-dependent constraints are enforced by post-filtering the
+            # k-best pool (same stance as PartitionLattice); a binding
+            # constraint can reject every unconstrained winner, so keep a
+            # much deeper pool when one is present
+            K = max(K, 64)
+        names = self.names
+        out_bytes = self.cost.out_bytes
+        # longest allowed contiguous run starting at each (resource, block)
+        run: dict[str, list[int]] = {}
+        for r in names:
+            ok = [self.cons.allowed(b, r) for b in range(B)]
+            ends = [0] * (B + 1)
+            for b in range(B - 1, -1, -1):
+                ends[b] = ends[b + 1] + 1 if ok[b] else 0
+            run[r] = ends[:B]
+
+        # memo[(b, ri, need)] = up to K (value, end, child_key, child_pos),
+        # sorted ascending; ``need`` never contains ri's own bit
+        memo: dict[tuple[int, int, int], list[tuple]] = {}
+        for b in range(B - 1, -1, -1):
+            for ri, r in enumerate(names):
+                n_run = run[r][b]
+                bit_r = self._bit(r)
+                # transitions are independent of the must-use mask — hoist
+                # the (end, r2) scan out of the need loop
+                term = self.cost.segment_time(r, b, B - 1) \
+                    if b + n_run >= B else None
+                trans: list[tuple] = []      # (base, end, rj, clear_bit)
+                for end in range(b, min(b + n_run, B - 1)):
+                    nbytes = float(out_bytes[end])
+                    seg_t = self.cost.segment_time(r, b, end)
+                    for rj, r2 in enumerate(names):
+                        if self.order[r2] <= self.order[r] or \
+                                not self.cons.transition_allowed(
+                                    r, r2, nbytes):
+                            continue
+                        base = max(seg_t, self.cost.comm(r, r2, nbytes))
+                        trans.append((base, end, rj, ~self._bit(r2)))
+                for need in range(self.full_mask + 1):
+                    if need & bit_r:
+                        continue
+                    cands: list[tuple] = []
+                    if term is not None and need == 0:
+                        cands.append((term, B - 1, None, -1))
+                    for base, end, rj, clear in trans:
+                        ck = (end + 1, rj, need & clear)
+                        child = memo.get(ck)
+                        if not child:
+                            continue
+                        for pos, ce in enumerate(child):
+                            cands.append((max(base, ce[0]), end, ck, pos))
+                    cands.sort(key=lambda t: t[0])
+                    memo[(b, ri, need)] = cands[:K]
+
+        finals: list[tuple[float, tuple[int, int, int], int]] = []
+        for ri, r in enumerate(names):
+            key = (0, ri, self.full_mask & ~self._bit(r))
+            entries = memo.get(key)
+            if not entries:
+                continue
+            inp = 0.0
+            if r != self.cost.source:
+                if not self.cons.transition_allowed(
+                        self.cost.source, r, self.cost.input_bytes):
+                    continue
+                inp = self.cost.comm(self.cost.source, r,
+                                     self.cost.input_bytes)
+            for pos in range(len(entries)):
+                finals.append((max(entries[pos][0], inp), key, pos))
+        finals.sort(key=lambda t: t[0])
+
+        out: list[PartitionConfig] = []
+        seen: set[tuple[Segment, ...]] = set()
+        for _, key, pos in finals:
+            segs = self._reconstruct(memo, key, pos)
+            if segs in seen:
+                continue
+            seen.add(segs)
+            cfg = self.cost.evaluate(segs)
+            if self.cons.path_feasible(cfg):
+                out.append(cfg)
+            if len(out) >= top_n * 2:
+                break
+        # ties in bottleneck are common (e.g. the input hop dominates);
+        # break them by end-to-end latency for deterministic, useful output
+        out.sort(key=lambda c: (c.bottleneck_s, c.latency_s))
+        return out[:top_n]
+
+    def _reconstruct(self, memo, key, pos) -> tuple[Segment, ...]:
+        segs: list[Segment] = []
+        start = key[0]
+        while True:
+            value, end, child_key, child_pos = memo[key][pos]
+            segs.append(Segment(self.names[key[1]], start, end))
+            if child_key is None:
+                return tuple(segs)
+            key, pos, start = child_key, child_pos, end + 1

@@ -87,18 +87,30 @@ class Scission:
     def best(self, model: str, input_bytes: float = 150e3) -> PartitionConfig:
         return self.query(model, Query(top_n=1), input_bytes).best
 
+    def frontier(self, model: str, query: Query | None = None,
+                 input_bytes: float = 150e3) -> QueryResult:
+        """Pareto non-dominated set over (latency, throughput, transfer)."""
+        return self.engine(model, input_bytes).frontier(query)
+
     # -- operational changes (motivation (vi), elastic runtime hook) ---------
     def with_resources(self, resources: list[Resource]) -> "Scission":
         """Re-plan with a changed resource set (maintenance, failure, join)
         WITHOUT re-benchmarking: the per-(block, resource) records of any
-        resource still present are reused."""
+        resource still present are reused.
+
+        A model's DB is kept even when some *new* resource has no records
+        yet — dropping it would silently discard all prior benchmarking.
+        Querying such a model raises a clear "resource X not benchmarked
+        for model Y" error at engine construction (CostModel validates);
+        run :meth:`benchmark_resource` for the newcomer first.
+        """
         s = Scission(resources=resources, network=self.network,
                      source=self.source, provider=self.provider,
                      runs=self.runs)
         names = {r.name for r in resources}
         for model, db in self._dbs.items():
             kept = {r: recs for r, recs in db.records.items() if r in names}
-            if kept and all(n in db.records for n in names):
+            if kept:
                 ndb = BenchmarkDB(model=db.model, n_blocks=db.n_blocks)
                 ndb.records = kept
                 s._dbs[model] = ndb

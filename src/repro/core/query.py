@@ -6,26 +6,43 @@ execution strategies, chosen automatically:
 
 * small search spaces (≤ ``EXHAUSTIVE_LIMIT`` configs): vectorised
   exhaustive enumeration + filter (the paper's own strategy);
-* large spaces: the k-best :class:`PartitionLattice`.
+* large spaces: the k-best :class:`PartitionLattice` — or, for the
+  throughput objective (a max, not a sum), the exact minimax
+  :class:`BottleneckLattice`.
 
 Both return identically-shaped ranked :class:`PartitionConfig` lists, so the
-paper's experiments and the 1000-node fleet path share one API.
+paper's experiments and the 1000-node fleet path share one API.  Beyond the
+single-objective ``run``, :meth:`QueryEngine.frontier` returns the Pareto
+non-dominated set over (latency, throughput, transfer) — the trade-off
+surface deployments actually choose between.
 """
 
 from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from .bench import BenchmarkDB
 from .network import NetworkModel
-from .partition import (Constraints, CostModel, Objective, LATENCY,
+from .partition import (BottleneckLattice, Constraints, CostModel, Objective,
+                        ThroughputObjective, LATENCY, TRANSFER, THROUGHPUT,
                         PartitionConfig, PartitionLattice,
-                        enumerate_partitions, ordered_pipelines, rank)
+                        enumerate_partitions, ordered_pipelines,
+                        pareto_frontier, rank)
 from .resources import Resource
 
 EXHAUSTIVE_LIMIT = 200_000
+
+
+def _dedupe(configs: list[PartitionConfig]) -> list[PartitionConfig]:
+    seen: set = set()
+    out = []
+    for cfg in configs:
+        if cfg.segments not in seen:
+            seen.add(cfg.segments)
+            out.append(cfg)
+    return out
 
 
 @dataclass
@@ -70,12 +87,30 @@ class QueryEngine:
                               source=source, input_bytes=input_bytes)
         self.resources = resources
         self._exhaustive_cache: list[PartitionConfig] | None = None
+        self._restricted_cache: dict[tuple, list[PartitionConfig]] = {}
 
     # -- sizing -------------------------------------------------------------
-    def _search_space(self) -> int:
+    def _valid_pipelines(self, pipes) -> tuple[tuple[str, ...], ...]:
+        """Normalize a ``Query.pipelines`` restriction: keep only pipes made
+        of known resources in strictly ascending tier order — the only
+        sequences any strategy can produce (data flows device -> edge ->
+        cloud).  Applying this in one place keeps the exhaustive-cache,
+        restricted-enumeration and lattice branches consistent."""
+        order = {r.name: r.order for r in self.resources}
+        return tuple(
+            p for p in pipes
+            if all(n in order for n in p)
+            and all(order[a] < order[b] for a, b in zip(p, p[1:])))
+
+    def _search_space(self, query: Query | None = None) -> int:
+        """Number of configurations the query actually ranges over — honors
+        a ``Query.pipelines`` restriction."""
         B = self.cost.n_blocks
+        pipes = ordered_pipelines(self.resources) \
+            if query is None or query.pipelines is None \
+            else self._valid_pipelines(query.pipelines)
         total = 0
-        for pipe in ordered_pipelines(self.resources):
+        for pipe in pipes:
             k = len(pipe)
             if k <= B:
                 total += math.comb(B - 1, k - 1)
@@ -86,31 +121,107 @@ class QueryEngine:
         query = query or Query()
         t0 = time.perf_counter()
         cons = query.constraints()
-        space = self._search_space()
-        if space <= EXHAUSTIVE_LIMIT:
+        if self._search_space(query) <= EXHAUSTIVE_LIMIT:
             configs = self._run_exhaustive(query, cons)
             strategy = "exhaustive"
         else:
-            lat = PartitionLattice(self.cost, cons, query.objective)
-            configs = lat.solve(top_n=query.top_n)
+            configs = self._run_lattice(query, cons)
             strategy = "lattice"
         return QueryResult(configs=configs,
                            query_time_s=time.perf_counter() - t0,
                            strategy=strategy)
 
+    def frontier(self, query: Query | None = None) -> QueryResult:
+        """Pareto non-dominated set over (latency, throughput, transfer).
+
+        Small spaces: exact — computed from the full (constraint-filtered)
+        enumeration.  Large spaces: assembled from k-best lattice solves
+        under each base objective and Pareto-filtered (a high-recall
+        approximation; every returned config is still non-dominated within
+        the candidate pool).  Results are sorted by latency.
+        """
+        query = query or Query()
+        t0 = time.perf_counter()
+        cons = query.constraints()
+        if self._search_space(query) <= EXHAUSTIVE_LIMIT:
+            front = pareto_frontier(self._filtered_exhaustive(query, cons))
+            strategy = "exhaustive"
+        else:
+            width = max(query.top_n, 16)
+            cands: list[PartitionConfig] = []
+            for obj in (LATENCY, TRANSFER, THROUGHPUT):
+                q = replace(query, objective=obj, top_n=width)
+                cands.extend(self._run_lattice(q, cons))
+            front = pareto_frontier(_dedupe(cands))
+            strategy = "lattice"
+        front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
+                                  c.transfer_bytes))
+        return QueryResult(configs=front,
+                           query_time_s=time.perf_counter() - t0,
+                           strategy=strategy)
+
+    def _lattice_for(self, cons: Constraints, objective: Objective):
+        if isinstance(objective, ThroughputObjective):
+            return BottleneckLattice(self.cost, cons)
+        return PartitionLattice(self.cost, cons, objective)
+
+    def _run_lattice(self, query: Query,
+                     cons: Constraints) -> list[PartitionConfig]:
+        if query.pipelines is None:
+            return self._lattice_for(cons, query.objective).solve(
+                top_n=query.top_n)
+        # Restrict the lattice to the requested pipelines: solving with
+        # must_use == the pipe and everything else excluded admits exactly
+        # that resource sequence (transitions only move to later tiers, so
+        # the order is forced), then merge the per-pipe k-best lists.
+        all_names = {r.name for r in self.resources}
+        merged: list[PartitionConfig] = []
+        for pipe in self._valid_pipelines(query.pipelines):
+            members = set(pipe)
+            if any(m not in members for m in query.must_use):
+                continue
+            if members & set(query.exclude):
+                continue
+            pcons = Constraints(
+                must_use=pipe,
+                exclude=tuple(set(query.exclude) | (all_names - members)),
+                pin=query.pin, max_link_bytes=query.max_link_bytes,
+                max_resource_time=query.max_resource_time,
+                min_blocks_on=query.min_blocks_on)
+            merged.extend(self._lattice_for(pcons, query.objective)
+                          .solve(top_n=query.top_n))
+        return rank(_dedupe(merged), query.objective, query.top_n)
+
     def _run_exhaustive(self, query: Query,
                         cons: Constraints) -> list[PartitionConfig]:
-        if self._exhaustive_cache is None:
-            self._exhaustive_cache = enumerate_partitions(self.cost)
+        return rank(self._filtered_exhaustive(query, cons),
+                    query.objective, query.top_n)
+
+    def _filtered_exhaustive(self, query: Query,
+                             cons: Constraints) -> list[PartitionConfig]:
+        if query.pipelines is not None and \
+                self._search_space() > EXHAUSTIVE_LIMIT:
+            # only the restricted space is small — enumerate just those
+            # pipelines instead of building the full cache (cached per
+            # pipeline set so repeated queries stay inside the 50 ms budget)
+            pipes = self._valid_pipelines(query.pipelines)
+            if pipes not in self._restricted_cache:
+                self._restricted_cache[pipes] = enumerate_partitions(
+                    self.cost, pipelines=pipes)
+            pool = self._restricted_cache[pipes]
+        else:
+            if self._exhaustive_cache is None:
+                self._exhaustive_cache = enumerate_partitions(self.cost)
+            pool = self._exhaustive_cache
         out = []
-        for cfg in self._exhaustive_cache:
+        for cfg in pool:
             if query.pipelines is not None and \
                     cfg.resources not in query.pipelines:
                 continue
             if not self._config_satisfies(cfg, cons):
                 continue
             out.append(cfg)
-        return rank(out, query.objective, query.top_n)
+        return out
 
     def _config_satisfies(self, cfg: PartitionConfig,
                           cons: Constraints) -> bool:

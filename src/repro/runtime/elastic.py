@@ -33,6 +33,17 @@ class PlanEvent:
     plan_time_s: float
     config: PartitionConfig
 
+    # both serving metrics are exposed per event so operators can audit the
+    # latency/throughput trade-off across re-plans regardless of which
+    # objective drove the query
+    @property
+    def latency_s(self) -> float:
+        return self.config.latency_s
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.config.throughput_rps
+
 
 class ElasticController:
     def __init__(self, scission: Scission, model: str,
@@ -68,11 +79,29 @@ class ElasticController:
 
     def on_resource_joined(self, resource: Resource) -> PlanEvent:
         """Elastic scale-up: Scission Step 3 runs incrementally for the new
-        resource only (existing records are reused), then a re-query."""
-        self.scission.resources = [*self.scission.resources, resource]
-        self.scission._engines.clear()
+        resource only (existing records are reused), then a re-query.
+
+        Fails fast — *before* mutating the membership view — when the new
+        resource has no benchmark records and no graph is available for
+        incremental benchmarking; admitting it would make the very next
+        re-plan die inside ``times_matrix``.
+        """
+        db = self.scission._dbs.get(self.model)
+        if self.graph is None and \
+                (db is None or resource.name not in db.records):
+            raise ValueError(
+                f"cannot admit resource {resource.name!r}: model "
+                f"{self.model!r} has no benchmark records for it and the "
+                "controller was built without graph=..., so incremental "
+                "benchmarking is impossible.  Pass graph= at construction "
+                "or call Scission.benchmark_resource() before joining.")
+        # benchmark BEFORE mutating membership so a provider failure
+        # (compile error, OOM on the new resource) leaves the controller
+        # in a consistent, re-plannable state
         if self.graph is not None:
             self.scission.benchmark_resource(self.graph, resource)
+        self.scission.resources = [*self.scission.resources, resource]
+        self.scission._engines.clear()
         return self._replan(f"joined:{resource.name}")
 
     def on_network_change(self, network: NetworkModel) -> PlanEvent:

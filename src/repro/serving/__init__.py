@@ -1,3 +1,5 @@
-from .engine import KVCachePool, Request, ServingEngine
+from .engine import (KVCachePool, Request, ServingEngine, ServingStats,
+                     simulate_pipeline_throughput)
 
-__all__ = ["KVCachePool", "Request", "ServingEngine"]
+__all__ = ["KVCachePool", "Request", "ServingEngine", "ServingStats",
+           "simulate_pipeline_throughput"]

@@ -23,7 +23,69 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.partition import PartitionConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
+
+
+@dataclass
+class ServingStats:
+    """Measured throughput of one :meth:`ServingEngine.run` — the observed
+    counterpart of :attr:`PartitionConfig.throughput_rps`.
+
+    ``wall_s`` is the full wall-clock of the run, so the *first* run on an
+    engine includes jit compilation of the prefill/decode steps; compare
+    against predictions only on a warmed engine (or after a throwaway run).
+    """
+
+    requests: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def simulate_pipeline_throughput(config: PartitionConfig,
+                                 n_requests: int = 128) -> float:
+    """Steady-state request rate of a partition under pipelined serving.
+
+    Discrete-event simulation with the classic pipeline recurrence — request
+    ``i`` enters stage ``s`` when both the previous stage has produced it
+    and the stage has finished request ``i-1``:
+
+        finish[i][s] = max(finish[i][s-1], finish[i-1][s]) + stage_time[s]
+
+    Stages are the input hop (if any), then compute segments interleaved
+    with inter-stage comm hops.  The measured rate converges to the cost
+    model's ``1 / bottleneck_s`` prediction; benchmarks/bench_partitions.py
+    uses this to validate predicted vs. simulated throughput.
+    """
+    stages: list[float] = []
+    if config.input_comm_s > 0.0:
+        stages.append(config.input_comm_s)
+    for k, t in enumerate(config.stage_compute_s):
+        stages.append(t)
+        if k < len(config.stage_comm_s):
+            stages.append(config.stage_comm_s[k])
+    if not stages or n_requests < 2:
+        return float("inf")
+    finish = [0.0] * len(stages)
+    done: list[float] = []
+    for _ in range(n_requests):
+        prev = 0.0
+        for s, dt in enumerate(stages):
+            finish[s] = max(prev, finish[s]) + dt
+            prev = finish[s]
+        done.append(prev)
+    # measure the steady-state rate over the second half (skip fill-up)
+    half = len(done) // 2
+    span = done[-1] - done[half - 1]
+    return (len(done) - half) / span if span > 0 else float("inf")
 
 
 @dataclass
@@ -84,6 +146,7 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}       # slot -> request
         self._next_tok = np.zeros((width, 1), np.int32)
+        self.stats = ServingStats()
 
     # -- client API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -92,12 +155,22 @@ class ServingEngine:
     def run(self, max_steps: int = 10_000) -> list[Request]:
         finished: list[Request] = []
         steps = 0
+        t0 = time.perf_counter()
         while (self.queue or self.active) and steps < max_steps:
             self._admit()
             if self.active:
                 self._decode_step(finished)
             steps += 1
+        self.stats = ServingStats(
+            requests=len(finished),
+            tokens=sum(len(r.tokens) for r in finished),
+            wall_s=time.perf_counter() - t0)
         return finished
+
+    @property
+    def measured_throughput_rps(self) -> float:
+        """Request throughput observed on the last :meth:`run`."""
+        return self.stats.requests_per_s
 
     # -- internals --------------------------------------------------------------
     def _admit(self) -> None:

@@ -10,10 +10,11 @@ pytest.importorskip(
     reason="hypothesis not installed (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (AnalyticProvider, Constraints, CostModel, LATENCY,
-                        Link, NetworkModel, PartitionLattice, Resource,
-                        Segment, benchmark_model, enumerate_partitions,
-                        linear_graph, rank)
+from repro.core import (AnalyticProvider, BottleneckLattice, Constraints,
+                        CostModel, LATENCY, THROUGHPUT, Link, NetworkModel,
+                        PartitionLattice, Resource, Segment, benchmark_model,
+                        dominates, enumerate_partitions, linear_graph,
+                        pareto_frontier, rank)
 from repro.core.graph import LayerGraph, LayerNode
 from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
 from repro.models.ssm import ssd
@@ -126,6 +127,41 @@ def test_constraints_never_improve_latency(seed):
     constrained = PartitionLattice(cost, cons).solve(top_n=1)
     if constrained:
         assert constrained[0].latency_s >= free.latency_s - 1e-12
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_bottleneck_dp_matches_oracle(seed):
+    """Min-bottleneck DP optimum == exhaustive throughput optimum."""
+    cost = _toy_cost(6, seed)
+    oracle = rank(enumerate_partitions(cost), THROUGHPUT)[0]
+    got = BottleneckLattice(cost).solve(top_n=1)[0]
+    assert abs(got.bottleneck_s - oracle.bottleneck_s) < 1e-9
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_pareto_frontier_sound_and_complete(seed):
+    """No frontier member is dominated by any enumerated config, and every
+    non-member is dominated by some frontier member."""
+    cost = _toy_cost(5, seed)
+    configs = enumerate_partitions(cost)
+    front = pareto_frontier(configs)
+    fset = {f.segments for f in front}
+    for c in configs:
+        if c.segments in fset:
+            assert not any(dominates(o, c) for o in configs)
+        else:
+            assert any(dominates(f, c) for f in front)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_throughput_at_least_inverse_latency(seed):
+    """Pipelining can only help: rate >= 1/latency for every config."""
+    cost = _toy_cost(5, seed)
+    for cfg in enumerate_partitions(cost):
+        assert cfg.throughput_rps >= 1.0 / cfg.latency_s - 1e-12
 
 
 @given(st.integers(0, 500))

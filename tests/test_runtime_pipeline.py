@@ -111,3 +111,62 @@ class TestElastic:
         ctl.on_resource_lost("cloud")
         ev = ctl.on_resource_lost("edge1")
         assert ev.config.resources == ("device",)
+
+    def test_join_without_graph_fails_fast(self):
+        """Regression: joining an unbenchmarked resource with graph=None
+        used to succeed and KeyError on the very next re-plan."""
+        g = cnn_zoo.build("MobileNet")
+        s = _scission()
+        s.benchmark(g)
+        ctl = ElasticController(s, "MobileNet", graph=None)
+        new = Resource("edge9", "edge", EDGE_BOX_1)
+        with pytest.raises(ValueError, match="edge9"):
+            ctl.on_resource_joined(new)
+        # the failed join must not corrupt the membership view
+        assert all(r.name != "edge9" for r in ctl.scission.resources)
+        ctl.on_resource_lost("edge1")          # re-planning still works
+
+    def test_join_without_graph_ok_when_already_benchmarked(self):
+        """A resource with existing records may join without a graph."""
+        g = cnn_zoo.build("MobileNet")
+        s_full = _scission()
+        db = s_full.benchmark(g)
+        res2 = [r for r in s_full.resources if r.name != "cloud"]
+        s = Scission(resources=res2, network=s_full.network, source="device",
+                     provider=AnalyticProvider(), runs=1)
+        s.load(db)                   # full DB — cloud records included
+        ctl = ElasticController(s, "MobileNet", graph=None)
+        ev = ctl.on_resource_joined(Resource("cloud", "cloud", CLOUD_VM))
+        assert "cloud" in {r.name for r in ctl.scission.resources}
+        assert ev.config.latency_s > 0
+
+    def test_with_resources_keeps_partial_db(self):
+        """Regression: with_resources used to silently drop a model's whole
+        DB when any new resource lacked records; now the partial DB is kept
+        and querying names the unbenchmarked resource."""
+        g = cnn_zoo.build("MobileNet")
+        s = _scission()
+        s.benchmark(g)
+        newcomer = Resource("edge9", "edge", EDGE_BOX_1)
+        s2 = s.with_resources([*s.resources, newcomer])
+        assert "MobileNet" in s2._dbs          # partial DB survives
+        with pytest.raises(ValueError, match="edge9.*MobileNet"):
+            s2.query("MobileNet")
+        # benchmarking the newcomer heals the engine
+        s2.benchmark_resource(g, newcomer)
+        assert s2.best("MobileNet").latency_s > 0
+
+    def test_plan_events_record_both_metrics(self):
+        from repro.core import THROUGHPUT
+        g = cnn_zoo.build("MobileNet")
+        s = _scission()
+        s.benchmark(g)
+        ctl = ElasticController(s, "MobileNet", graph=g,
+                                query=Query(top_n=1, objective=THROUGHPUT))
+        ev = ctl.on_resource_lost("edge1")
+        for e in ctl.history:
+            assert e.latency_s == pytest.approx(e.config.latency_s)
+            assert e.throughput_rps == pytest.approx(
+                e.config.throughput_rps)
+        # throughput objective: the survivor plan maximises throughput
+        assert ev.throughput_rps > 0

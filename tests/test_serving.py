@@ -45,6 +45,13 @@ class TestEngine:
         assert len(done) == 5
         assert all(len(r.tokens) == 4 for r in done)
         assert all(r.first_token_at is not None for r in done)
+        # measured throughput is reported for the completed run
+        assert eng.stats.requests == 5
+        assert eng.stats.tokens == 20
+        assert eng.stats.wall_s > 0
+        assert eng.measured_throughput_rps == pytest.approx(
+            5 / eng.stats.wall_s)
+        assert eng.stats.tokens_per_s == pytest.approx(20 / eng.stats.wall_s)
 
     def test_matches_unbatched_greedy(self, small_model):
         """Continuous-batched decode must equal one-at-a-time greedy."""

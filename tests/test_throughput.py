@@ -1,0 +1,293 @@
+"""Pipelined-serving throughput model, min-bottleneck DP, Pareto frontier,
+and the Query.pipelines lattice restriction."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticProvider, BottleneckLattice, Constraints,
+                        CostModel, LATENCY, Link, NetworkModel,
+                        PartitionLattice, Query, QueryEngine, Resource,
+                        Segment, THROUGHPUT, TRANSFER, benchmark_model,
+                        dominates, enumerate_partitions, linear_graph,
+                        pareto_frontier, rank)
+from repro.core.graph import LayerNode
+from repro.core.network import paper_network, THREE_G, FOUR_G, WIRED
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+from repro.models import cnn_zoo
+from repro.serving.engine import simulate_pipeline_throughput
+import repro.core.query as query_mod
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def make_model(n=8, d=16, name="toy"):
+    layers = []
+    for i in range(n):
+        w = jax.random.normal(jax.random.PRNGKey(i), (d, d)) * 0.1
+        layers.append(LayerNode(name=f"fc{i}", kind="dense",
+                                apply=lambda x, w=w: jnp.tanh(x @ w),
+                                flops=2.0 * d * d, param_bytes=4 * d * d))
+    return linear_graph(name, _spec(1, d), layers)
+
+
+def _resources():
+    return [Resource("device", "device", RPI4, speed_factor=30.0),
+            Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0),
+            Resource("cloud", "cloud", CLOUD_VM, speed_factor=1.0)]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    graph = make_model()
+    resources = _resources()
+    db = benchmark_model(graph, resources, AnalyticProvider(), runs=1)
+    net = paper_network(FOUR_G, edges=("edge1",), clouds=("cloud",))
+    cost = CostModel(db=db, resources=resources, network=net,
+                     source="device", input_bytes=150e3)
+    return graph, resources, db, net, cost
+
+
+def _rand_cost(seed, n_blocks=6):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i in range(n_blocks):
+        d = int(rng.integers(4, 16)) * 2
+        layers.append(LayerNode(f"l{i}", "dense",
+                                apply=lambda x, d=d: jnp.tile(
+                                    x[..., :1], (1, d)),
+                                flops=float(rng.integers(1, 100)) * 1e6))
+    g = linear_graph(f"toy{seed}", _spec(1, 8), layers)
+    res = _resources()
+    db = benchmark_model(g, res, AnalyticProvider(), runs=1)
+    net = NetworkModel(default=Link("l", 0.01, 1e6))
+    return CostModel(db=db, resources=res, network=net, source="device",
+                     input_bytes=1e5)
+
+
+class TestThroughputModel:
+    def test_bottleneck_is_max_stage(self, setup):
+        _, _, db, net, cost = setup
+        B = db.n_blocks
+        segs = [Segment("device", 0, 1), Segment("edge1", 2, 3),
+                Segment("cloud", 4, B - 1)]
+        cfg = cost.evaluate(segs)
+        stages = [sum(db.time("device", b) for b in (0, 1)),
+                  sum(db.time("edge1", b) for b in (2, 3)),
+                  sum(db.time("cloud", b) for b in range(4, B)),
+                  net.comm_time("device", "edge1", db.output_bytes(1)),
+                  net.comm_time("edge1", "cloud", db.output_bytes(3))]
+        assert cfg.bottleneck_s == pytest.approx(max(stages))
+        assert cfg.throughput_rps == pytest.approx(1.0 / max(stages))
+        assert cfg.stage_compute_s == pytest.approx(tuple(stages[:3]))
+        assert cfg.stage_comm_s == pytest.approx(tuple(stages[3:]))
+
+    def test_native_source_bottleneck_is_compute(self, setup):
+        _, _, db, _, cost = setup
+        cfg = cost.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        assert cfg.bottleneck_s == pytest.approx(sum(cfg.compute_s.values()))
+
+    def test_input_hop_counts_as_stage(self, setup):
+        _, _, db, net, cost = setup
+        cfg = cost.evaluate([Segment("cloud", 0, db.n_blocks - 1)])
+        assert cfg.bottleneck_s >= net.comm_time("device", "cloud", 150e3)
+
+    def test_rank_top_n_zero_returns_empty(self, setup):
+        _, _, _, _, cost = setup
+        configs = enumerate_partitions(cost)
+        assert rank(configs, LATENCY, top_n=0) == []
+        assert len(rank(configs, LATENCY, top_n=None)) == len(configs)
+        # every strategy agrees on the top_n=0 edge case
+        assert PartitionLattice(cost).solve(top_n=0) == []
+        assert BottleneckLattice(cost).solve(top_n=0) == []
+
+
+class TestBottleneckDP:
+    def test_optimum_matches_oracle(self, setup):
+        _, _, _, _, cost = setup
+        oracle = rank(enumerate_partitions(cost), THROUGHPUT)[0]
+        got = BottleneckLattice(cost).solve(top_n=1)[0]
+        assert got.bottleneck_s == pytest.approx(oracle.bottleneck_s)
+
+    def test_topn_matches(self, setup):
+        _, _, _, _, cost = setup
+        oracle = rank(enumerate_partitions(cost), THROUGHPUT, top_n=5)
+        got = BottleneckLattice(cost).solve(top_n=5)
+        assert len(got) == 5
+        for o, g in zip(oracle, got):
+            assert g.bottleneck_s == pytest.approx(o.bottleneck_s)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_costs_match_oracle(self, seed):
+        cost = _rand_cost(seed)
+        oracle = rank(enumerate_partitions(cost), THROUGHPUT)[0]
+        got = BottleneckLattice(cost).solve(top_n=1)[0]
+        assert abs(got.bottleneck_s - oracle.bottleneck_s) < 1e-12
+
+    def test_must_use_constraint(self, setup):
+        _, _, _, _, cost = setup
+        cons = Constraints(must_use=("device", "edge1", "cloud"))
+        got = BottleneckLattice(cost, cons).solve(top_n=1)[0]
+        oracle = rank([c for c in enumerate_partitions(cost)
+                       if set(c.resources) >= {"device", "edge1", "cloud"}],
+                      THROUGHPUT)[0]
+        assert got.bottleneck_s == pytest.approx(oracle.bottleneck_s)
+        assert set(got.resources) == {"device", "edge1", "cloud"}
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_min_blocks_on_binding_constraint(self, seed):
+        """Regression: a binding path-dependent constraint used to reject
+        the whole (truncated) k-best pool and return [] even when feasible
+        partitions existed; the widened pool must find the constrained
+        optimum."""
+        cost = _rand_cost(seed, n_blocks=7)
+        cons = Constraints(min_blocks_on={"device": 5})
+        feas = [c for c in enumerate_partitions(cost)
+                if sum(s.end - s.start + 1 for s in c.segments
+                       if s.resource == "device") >= 5]
+        oracle = rank(feas, THROUGHPUT)[0]
+        got = BottleneckLattice(cost, cons).solve(top_n=1)
+        assert got, "binding constraint must not empty the result"
+        assert got[0].bottleneck_s == pytest.approx(oracle.bottleneck_s)
+
+    def test_exclude_and_pin(self, setup):
+        _, _, _, _, cost = setup
+        cons = Constraints(exclude=("cloud",), pin={3: "edge1"})
+        for cfg in BottleneckLattice(cost, cons).solve(top_n=3):
+            assert "cloud" not in cfg.resources
+            seg = next(s for s in cfg.segments if s.start <= 3 <= s.end)
+            assert seg.resource == "edge1"
+
+    _zoo_dbs: dict = {}
+
+    @pytest.mark.parametrize("model", ["MobileNet", "ResNet50"])
+    @pytest.mark.parametrize("access", [THREE_G, FOUR_G, WIRED])
+    def test_cnn_zoo_matches_oracle(self, model, access):
+        """Acceptance: the min-bottleneck DP matches exhaustive throughput
+        winners on CNN-zoo models under the paper's network conditions."""
+        resources = _resources()
+        if model not in self._zoo_dbs:
+            self._zoo_dbs[model] = benchmark_model(
+                cnn_zoo.build(model), resources, AnalyticProvider(), runs=1)
+        db = self._zoo_dbs[model]
+        net = paper_network(access, edges=("edge1",), clouds=("cloud",))
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3)
+        oracle = rank(enumerate_partitions(cost), THROUGHPUT)[0]
+        got = BottleneckLattice(cost).solve(top_n=1)[0]
+        assert got.bottleneck_s == pytest.approx(oracle.bottleneck_s)
+
+
+class TestParetoFrontier:
+    def test_frontier_is_exact_nondominated_set(self, setup):
+        _, _, _, _, cost = setup
+        configs = enumerate_partitions(cost)
+        front = pareto_frontier(configs)
+        # soundness: nothing returned is dominated by any enumerated config
+        for f in front:
+            assert not any(dominates(c, f) for c in configs)
+        # completeness: everything left out is dominated by a frontier member
+        fset = {f.segments for f in front}
+        for c in configs:
+            if c.segments not in fset:
+                assert any(dominates(f, c) for f in front)
+
+    def test_engine_frontier_matches_enumeration(self, setup):
+        _, resources, db, net, cost = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        res = eng.frontier()
+        assert res.strategy == "exhaustive"
+        want = pareto_frontier(enumerate_partitions(cost))
+        assert {c.segments for c in res.configs} == \
+            {c.segments for c in want}
+        lats = [c.latency_s for c in res.configs]
+        assert lats == sorted(lats)
+
+    def test_frontier_contains_all_single_objective_winners(self, setup):
+        _, resources, db, net, cost = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        front = {c.segments for c in eng.frontier().configs}
+        for obj in (LATENCY, TRANSFER, THROUGHPUT):
+            best = eng.run(Query(top_n=1, objective=obj)).best
+            # the winner is non-dominated unless tied with a frontier member
+            assert best.segments in front or any(
+                not dominates(best, c) and not dominates(c, best)
+                for c in eng.frontier().configs)
+
+
+class TestLatticePipelines:
+    PIPES = (("device", "cloud"), ("device", "edge1", "cloud"))
+
+    def _engines(self, setup, monkeypatch):
+        _, resources, db, net, _ = setup
+        exh = QueryEngine(db, resources, net, "device", 150e3)
+        res_exh = exh.run(Query(top_n=4, pipelines=self.PIPES))
+        monkeypatch.setattr(query_mod, "EXHAUSTIVE_LIMIT", -1)
+        lat = QueryEngine(db, resources, net, "device", 150e3)
+        res_lat = lat.run(Query(top_n=4, pipelines=self.PIPES))
+        return res_exh, res_lat
+
+    def test_lattice_honors_pipelines(self, setup, monkeypatch):
+        res_exh, res_lat = self._engines(setup, monkeypatch)
+        assert res_exh.strategy == "exhaustive"
+        assert res_lat.strategy == "lattice"
+        for cfg in res_lat.configs:
+            assert cfg.resources in self.PIPES
+        assert [c.segments for c in res_lat.configs] == \
+            [c.segments for c in res_exh.configs]
+
+    def test_lattice_throughput_matches_exhaustive(self, setup, monkeypatch):
+        _, resources, db, net, _ = setup
+        exh = QueryEngine(db, resources, net, "device", 150e3)
+        want = exh.run(Query(top_n=3, objective=THROUGHPUT))
+        monkeypatch.setattr(query_mod, "EXHAUSTIVE_LIMIT", -1)
+        lat = QueryEngine(db, resources, net, "device", 150e3)
+        got = lat.run(Query(top_n=3, objective=THROUGHPUT))
+        assert got.strategy == "lattice"
+        for g, w in zip(got.configs, want.configs):
+            assert g.bottleneck_s == pytest.approx(w.bottleneck_s)
+
+    def test_invalid_pipelines_consistent_across_strategies(self, setup,
+                                                            monkeypatch):
+        """A pipe that is not strictly tier-ascending (or names an unknown
+        resource) is unrepresentable; every strategy must agree it yields
+        nothing — including the restricted-enumeration branch."""
+        _, resources, db, net, _ = setup
+        bad = (("edge1", "device"), ("device", "nosuch"))
+        exh = QueryEngine(db, resources, net, "device", 150e3)
+        assert exh.run(Query(top_n=3, pipelines=bad)).configs == []
+        assert exh._search_space(Query(pipelines=bad)) == 0
+        monkeypatch.setattr(query_mod, "EXHAUSTIVE_LIMIT", -1)
+        lat = QueryEngine(db, resources, net, "device", 150e3)
+        assert lat.run(Query(top_n=3, pipelines=bad)).configs == []
+
+    def test_search_space_counts_restricted_space(self, setup):
+        _, resources, db, net, _ = setup
+        eng = QueryEngine(db, resources, net, "device", 150e3)
+        B = db.n_blocks
+        want = sum(math.comb(B - 1, len(p) - 1) for p in self.PIPES)
+        assert eng._search_space(Query(pipelines=self.PIPES)) == want
+        assert eng._search_space() > want
+
+
+class TestPipelineSimulator:
+    def test_simulated_matches_predicted(self, setup):
+        _, resources, db, net, _ = setup
+        eng = QueryEngine(db, resources, net, "device", 150e3)
+        for cfg in eng.run(Query(top_n=5)).configs:
+            sim = simulate_pipeline_throughput(cfg, n_requests=256)
+            assert sim == pytest.approx(cfg.throughput_rps, rel=0.01)
+
+    def test_single_stage_rate(self, setup):
+        _, _, db, _, cost = setup
+        cfg = cost.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        sim = simulate_pipeline_throughput(cfg, n_requests=64)
+        assert sim == pytest.approx(1.0 / sum(cfg.compute_s.values()),
+                                    rel=0.01)
