@@ -1,12 +1,20 @@
 """Figures 6-15 + Table IV reproduction: Scission decisions under network
 conditions, input sizes, constraints, pipelines, and top-N rankings — plus
 the beyond-paper pipelined-serving scenarios: throughput-optimal partitions
-(predicted vs. simulated) and Pareto-front queries.
+(predicted vs. simulated), Pareto-front queries, and batched/replicated
+operating points (benchmark DBs carry per-batch profiles; queries carry a
+``batch_size`` and a per-resource ``replicas`` budget; ``frontier()`` sweeps
+the measured batch sizes).
 
 Run standalone in smoke mode for CI::
 
     PYTHONPATH=src python -m benchmarks.bench_partitions --smoke \
         --out results/bench_partitions_smoke.json
+
+    # batched/replicated path (two batch sizes, replicated stages); fails
+    # if predicted vs simulated throughput diverges by more than 25%:
+    PYTHONPATH=src python -m benchmarks.bench_partitions --smoke-batched \
+        --out results/bench_partitions_smoke_batched.json
 """
 
 from __future__ import annotations
@@ -178,6 +186,64 @@ def scenario_frontier(quick=True, models=None):
     return rows
 
 
+def scenario_batched(quick=True, models=None, batch_sizes=(1, 4),
+                     replicas=None):
+    """Beyond-paper: batched + replicated operating points.  Benchmarks a
+    per-batch profile, compares the best batch-1 single-replica throughput
+    partition against the frontier's best (batch, replica) operating point,
+    and validates the winner's prediction against the replica-aware
+    pipeline simulation.
+
+    A point FAILS when predicted vs simulated diverges by more than 25%
+    (wall-clock batch profiles are noisier than the batch-1 path); the
+    whole scenario additionally fails unless at least one (network, model)
+    shows a batched/replicated point beating its batch-1 baseline.
+    """
+    print("\n# Batched/replicated operating points — frontier vs batch-1")
+    scenario_batched.failures = []
+    rows = []
+    models = models or ["MobileNetV2"]
+    replicas = replicas if replicas is not None else \
+        {"device": 2, "edge1": 2}
+    rep_desc = ",".join(f"{k}x{v}" for k, v in sorted(replicas.items()))
+    gains = []
+    for net in ("3g", "wired") if quick else ("3g", "4g", "wired"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m, batch_sizes=batch_sizes)
+            base = s.query(m, Query(top_n=1, objective=THROUGHPUT)).best
+            res = s.frontier(m, Query(batch_sizes=tuple(batch_sizes),
+                                      replicas=replicas))
+            top = max(res.configs, key=lambda c: c.throughput_rps)
+            pred = top.throughput_rps
+            t0 = time.perf_counter()
+            sim = simulate_pipeline_throughput(top, n_requests=512)
+            sim_us = (time.perf_counter() - t0) * 1e6
+            err = abs(sim - pred) / pred if pred > 0 else 0.0
+            gain = pred / base.throughput_rps if base.throughput_rps else 1.0
+            gains.append(gain)
+            ok = "PASS" if err < 0.25 else "FAIL"
+            if ok == "FAIL":
+                scenario_batched.failures.append(f"{net}/{m}")
+            print(f"  [{net}] {m} (batches={list(batch_sizes)} "
+                  f"budget={rep_desc}):")
+            print(f"    batch-1 best : {base.describe()}")
+            print(f"    frontier best: {top.describe()}")
+            print(f"    pred={pred:8.2f}rps sim={sim:8.2f}rps "
+                  f"err={err * 100:.2f}% gain={gain:.2f}x {ok}")
+            rows.append((f"batched/{net}/{m}", res.query_time_s * 1e6,
+                         round(pred, 3)))
+            rows.append((f"batched_sim/{net}/{m}", sim_us, round(sim, 3)))
+            rows.append((f"batched_gain/{net}/{m}", 0.0, round(gain, 3)))
+    if gains and max(gains) <= 1.0:
+        scenario_batched.failures.append(
+            "no-gain: no batched/replicated point beat its batch-1 baseline")
+    return rows
+
+
+scenario_batched.failures = []
+
+
 def run(quick: bool = True):
     rows = []
     rows += scenario_network(quick)
@@ -187,7 +253,16 @@ def run(quick: bool = True):
     rows += scenario_topn(quick)
     rows += scenario_throughput(quick)
     rows += scenario_frontier(quick)
+    rows += scenario_batched(quick)
     return rows
+
+
+def smoke_batched():
+    """CI pass for the batched/replicated path: one CNN, two batch sizes,
+    a two-replica budget on the device and edge tiers, 3G + wired."""
+    return scenario_batched(quick=True, models=["MobileNetV2"],
+                            batch_sizes=(1, 4),
+                            replicas={"device": 2, "edge1": 2})
 
 
 def smoke():
@@ -209,11 +284,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="single-model CI pass (fastest)")
+    ap.add_argument("--smoke-batched", action="store_true",
+                    help="single-model CI pass over the batched/replicated "
+                         "path (two batch sizes, replicated stages)")
     ap.add_argument("--full", action="store_true", help="all models")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     args = ap.parse_args()
-    rows = smoke() if args.smoke else run(quick=not args.full)
+    if args.smoke_batched:
+        rows = smoke_batched()
+    elif args.smoke:
+        rows = smoke()
+    else:
+        rows = run(quick=not args.full)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -223,9 +306,10 @@ def main() -> None:
             json.dump([{"name": n, "us_per_call": us, "derived": d}
                        for n, us, d in rows], f, indent=2)
         print(f"wrote {args.out}")
-    if scenario_throughput.failures:
+    failures = scenario_throughput.failures + scenario_batched.failures
+    if failures:
         print(f"FAILED predicted-vs-simulated throughput validation: "
-              f"{', '.join(scenario_throughput.failures)}")
+              f"{', '.join(failures)}")
         raise SystemExit(1)
 
 

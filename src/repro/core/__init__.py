@@ -7,12 +7,13 @@ from .resources import (DeviceModel, Resource, paper_testbed, tpu_testbed,
 from .network import (Link, NetworkModel, THREE_G, FOUR_G, WIRED, EDGE_CLOUD,
                       ICI, DCN, paper_network, tpu_network)
 from .bench import (BenchmarkDB, BlockBenchmark, TimingProvider,
-                    CompiledCostProvider, AnalyticProvider, benchmark_model)
+                    CompiledCostProvider, AnalyticProvider, benchmark_model,
+                    benchmark_batches)
 from .partition import (Segment, PartitionConfig, CostModel, Objective,
                         ThroughputObjective, LATENCY, TRANSFER, THROUGHPUT,
                         Constraints, PartitionLattice, BottleneckLattice,
                         enumerate_partitions, ordered_pipelines, rank,
-                        pareto_frontier, dominates)
+                        pareto_frontier, dominates, trim_replicas)
 from .query import Query, QueryEngine, QueryResult
 from .planner import Scission
 
@@ -23,11 +24,11 @@ __all__ = [
     "Link", "NetworkModel", "THREE_G", "FOUR_G", "WIRED", "EDGE_CLOUD",
     "ICI", "DCN", "paper_network", "tpu_network",
     "BenchmarkDB", "BlockBenchmark", "TimingProvider", "CompiledCostProvider",
-    "AnalyticProvider", "benchmark_model",
+    "AnalyticProvider", "benchmark_model", "benchmark_batches",
     "Segment", "PartitionConfig", "CostModel", "Objective",
     "ThroughputObjective", "LATENCY", "TRANSFER", "THROUGHPUT",
     "Constraints", "PartitionLattice", "BottleneckLattice",
     "enumerate_partitions", "ordered_pipelines", "rank",
-    "pareto_frontier", "dominates",
+    "pareto_frontier", "dominates", "trim_replicas",
     "Query", "QueryEngine", "QueryResult", "Scission",
 ]

@@ -24,20 +24,32 @@ Cost model (paper's two assumptions, validated in tests/test_bench.py):
                     + Σ_segments Σ_blocks time(r_i, b)
                     + Σ_cuts     comm(r_i -> r_{i+1}, out_bytes[cut])
 
-Pipelined-serving model (streamed deployments): with one request in
-flight per stage, the steady-state rate is limited by the slowest stage —
-either a compute segment or a communication hop (including the
-source->first-resource input hop):
+Pipelined-serving model (streamed deployments): requests move through the
+pipeline in batches of ``batch_size`` and each compute stage may run on
+``replicas[k]`` copies of its resource, so the steady-state rate is limited
+by the slowest *effective* stage — a compute segment serves
+``replicas[k] * batch`` requests per ``stage_time(batch)``, a communication
+hop (including the source->first-resource input hop) serves ``batch``
+requests per per-batch transfer time:
 
-    bottleneck(config) = max(input_comm, stage_compute_i, hop_comm_j)
-    throughput_rps     = 1 / bottleneck
+    period_k    = stage_time_k(batch) / (replicas_k * batch)   (compute)
+    period_j    = hop_time_j(batch)   / batch                  (comm)
+    bottleneck  = max_k period_k
+    throughput_rps = 1 / bottleneck
+
+With ``batch_size == 1`` and all-ones replicas this reduces to the
+one-request-per-stage model (max over raw stage/hop times).  Stage times at
+``batch > 1`` come from the benchmark DB's measured batch profiles
+(log-linear interpolation between measured points, clamped at the measured
+extremes), so batching economies are priced empirically, not assumed.
 """
 
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass, field, replace
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -56,7 +68,15 @@ class Segment:
 
 @dataclass
 class PartitionConfig:
-    """One ranked configuration (a row of the paper's Table IV)."""
+    """One ranked configuration (a row of the paper's Table IV).
+
+    A config is an **operating point**: segments plus the batch size the
+    per-stage timings were priced at and the per-segment replica counts.
+    ``latency_s`` / ``stage_compute_s`` / ``stage_comm_s`` /
+    ``transfer_bytes`` are all *per batch* on *one replica* (at
+    ``batch_size == 1`` that is exactly the paper's per-request model);
+    ``bottleneck_s`` / ``throughput_rps`` are per-request effective values.
+    """
 
     model: str
     segments: tuple[Segment, ...]
@@ -69,6 +89,10 @@ class PartitionConfig:
     # one comm time per hop between consecutive segments
     stage_compute_s: tuple[float, ...] = ()
     stage_comm_s: tuple[float, ...] = ()
+    # operating point: batch the stage timings were priced at, and replica
+    # count per segment (empty tuple == one replica everywhere)
+    batch_size: int = 1
+    replicas: tuple[int, ...] = ()
 
     @property
     def resources(self) -> tuple[str, ...]:
@@ -78,43 +102,79 @@ class PartitionConfig:
     def is_native(self) -> bool:
         return len(self.segments) == 1
 
+    def replica_count(self, k: int) -> int:
+        """Replicas serving compute stage ``k`` (1 when unspecified)."""
+        return self.replicas[k] if k < len(self.replicas) else 1
+
+    @property
+    def stage_periods_s(self) -> tuple[float, ...]:
+        """Effective per-request service period of every pipeline stage, in
+        pipeline order: input hop (if any), then each compute segment
+        followed by its outgoing comm hop.  A compute stage with ``r``
+        replicas at batch ``b`` serves ``r*b`` requests per ``stage_time``;
+        a hop serves ``b`` requests per per-batch transfer."""
+        b = max(1, self.batch_size)
+        periods: list[float] = []
+        if self.input_comm_s > 0.0:
+            periods.append(self.input_comm_s / b)
+        for k, t in enumerate(self.stage_compute_s):
+            periods.append(t / (self.replica_count(k) * b))
+            if k < len(self.stage_comm_s):
+                periods.append(self.stage_comm_s[k] / b)
+        return tuple(periods)
+
     @property
     def bottleneck_s(self) -> float:
-        """Slowest pipeline stage (compute segment, inter-stage hop, or the
-        input hop) — the steady-state period under pipelined serving."""
-        stages = [*self.stage_compute_s, *self.stage_comm_s]
-        if self.input_comm_s > 0.0:
-            stages.append(self.input_comm_s)
-        return max(stages) if stages else self.latency_s
+        """Slowest effective pipeline stage (replica- and batch-adjusted) —
+        the steady-state per-request period under pipelined serving."""
+        periods = self.stage_periods_s
+        return max(periods) if periods else self.latency_s
 
     @property
     def throughput_rps(self) -> float:
-        """Steady-state pipelined request rate = 1 / bottleneck stage."""
+        """Steady-state pipelined request rate = 1 / effective bottleneck."""
         b = self.bottleneck_s
         return 1.0 / b if b > 0.0 else float("inf")
 
     def describe(self) -> str:
         parts = [f"{s.resource}: {s.start}-{s.end}" if s.start != s.end
                  else f"{s.resource}: {s.start}" for s in self.segments]
+        op = ""
+        if self.batch_size != 1:
+            op += f" batch={self.batch_size}"
+        if any(r != 1 for r in self.replicas):
+            op += " reps=" + "x".join(str(self.replica_count(k))
+                                      for k in range(len(self.segments)))
         return (f"[{self.model}] " + " | ".join(parts)
                 + f"  latency={self.latency_s * 1e3:.1f}ms"
                 + f" thpt={self.throughput_rps:.1f}rps"
-                + f" transfer={self.transfer_bytes / 1e6:.3f}MB")
+                + f" transfer={self.transfer_bytes / 1e6:.3f}MB" + op)
 
 
 @dataclass
 class CostModel:
-    """Precomputed vectorised costs for one (model, resource set, network)."""
+    """Precomputed vectorised costs for one (model, resource set, network)
+    at one operating point (batch size + per-resource replica budget).
+
+    ``batch_size`` selects the per-batch block times from the DB's measured
+    batch profiles (interpolated when unmeasured); ``replica_budget`` maps a
+    resource name to the number of copies a stage placed on it may use
+    (default 1).  All per-config quantities (latency, stage times, transfer)
+    are per batch; the effective per-request stage periods divide by
+    ``replicas * batch`` (compute) / ``batch`` (comm).
+    """
 
     db: BenchmarkDB
     resources: list[Resource]
     network: NetworkModel
     source: str                      # where the input data originates
-    input_bytes: float
+    input_bytes: float               # per request
+    batch_size: int = 1
+    replica_budget: dict[str, int] = field(default_factory=dict)
 
-    times: np.ndarray = field(init=False)        # (R, B)
+    times: np.ndarray = field(init=False)        # (R, B) per-batch seconds
     cum: np.ndarray = field(init=False)          # (R, B+1) prefix sums
-    out_bytes: np.ndarray = field(init=False)    # (B,)
+    out_bytes: np.ndarray = field(init=False)    # (B,) per-batch bytes
 
     def __post_init__(self):
         names = [r.name for r in self.resources]
@@ -124,22 +184,57 @@ class CostModel:
                 f"resource(s) {', '.join(sorted(missing))} not benchmarked "
                 f"for model {self.db.model!r}; run Scission.benchmark() / "
                 "benchmark_resource() for them first")
-        self.times = self.db.times_matrix(names)
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        max_batch = self.db.max_batch(names)
+        if self.batch_size > max_batch:
+            # pricing batch b from a profile clamped at max_batch would
+            # divide the clamped time by b — linear throughput extrapolation
+            # the measurements do not support
+            raise ValueError(
+                f"batch_size {self.batch_size} exceeds the largest measured "
+                f"batch ({max_batch}) for model {self.db.model!r}; "
+                "re-run benchmark_model(batch_sizes=...) to cover it")
+        bad = {r: n for r, n in self.replica_budget.items() if n < 1}
+        if bad:
+            raise ValueError(f"replica budget must be >= 1, got {bad}")
+        self.times = self.db.times_matrix(names, batch=self.batch_size)
         self.cum = np.concatenate(
             [np.zeros((len(names), 1)), np.cumsum(self.times, axis=1)], axis=1)
-        self.out_bytes = self.db.out_bytes_vector()
+        self.out_bytes = self.db.out_bytes_vector(batch=self.batch_size)
         self._idx = {n: i for i, n in enumerate(names)}
 
     @property
     def n_blocks(self) -> int:
         return self.db.n_blocks
 
+    @property
+    def batch_input_bytes(self) -> float:
+        """Bytes of input data entering the pipeline per batch."""
+        return self.input_bytes * self.batch_size
+
+    def replicas_for(self, resource: str) -> int:
+        return max(1, int(self.replica_budget.get(resource, 1)))
+
     def segment_time(self, resource: str, start: int, end: int) -> float:
+        """Per-batch compute time of blocks ``start..end`` on one replica."""
         i = self._idx[resource]
         return float(self.cum[i, end + 1] - self.cum[i, start])
 
     def comm(self, src: str, dst: str, nbytes: float) -> float:
         return self.network.comm_time(src, dst, nbytes)
+
+    # -- effective per-request periods (the minimax DP's stage costs) --------
+    def stage_period(self, resource: str, start: int, end: int) -> float:
+        """Per-request service period of a compute stage: ``replicas``
+        copies each finish a batch of ``batch_size`` per segment time."""
+        return self.segment_time(resource, start, end) / (
+            self.replicas_for(resource) * self.batch_size)
+
+    def hop_period(self, src: str, dst: str, nbytes: float) -> float:
+        """Per-request service period of a comm hop moving ``nbytes`` (a
+        per-batch quantity) between stages."""
+        return self.comm(src, dst, nbytes) / self.batch_size
 
     def evaluate(self, segments: Sequence[Segment],
                  objective: "Objective | None" = None) -> PartitionConfig:
@@ -149,8 +244,8 @@ class CostModel:
         first = segments[0].resource
         input_comm = 0.0
         if first != self.source:
-            input_comm = self.comm(self.source, first, self.input_bytes)
-            xfer += self.input_bytes
+            input_comm = self.comm(self.source, first, self.batch_input_bytes)
+            xfer += self.batch_input_bytes
         stage_compute: list[float] = []
         stage_comm: list[float] = []
         for k, seg in enumerate(segments):
@@ -169,7 +264,9 @@ class CostModel:
             compute_s=compute, comm_s=comm, transfer_bytes=xfer,
             input_comm_s=input_comm,
             stage_compute_s=tuple(stage_compute),
-            stage_comm_s=tuple(stage_comm))
+            stage_comm_s=tuple(stage_comm),
+            batch_size=self.batch_size,
+            replicas=tuple(self.replicas_for(s.resource) for s in segments))
 
 
 @dataclass(frozen=True)
@@ -258,6 +355,27 @@ def rank(configs: list[PartitionConfig], objective: Objective = LATENCY,
          top_n: int | None = None) -> list[PartitionConfig]:
     out = sorted(configs, key=objective.score)
     return out if top_n is None else out[:top_n]
+
+
+def trim_replicas(cfg: PartitionConfig) -> PartitionConfig:
+    """Right-size an operating point: shrink each stage's replica count to
+    the minimum that keeps the bottleneck (hence throughput) unchanged.
+
+    A replica budget is an upper bound; a stage that is not the bottleneck
+    may hit the same rate with fewer copies.  Frontier results are trimmed
+    so operators never over-provision to match a reported operating point.
+    """
+    if not cfg.replicas or all(r == 1 for r in cfg.replicas):
+        return cfg
+    b = max(1, cfg.batch_size)
+    bneck = cfg.bottleneck_s
+    if bneck <= 0.0:
+        return cfg
+    trimmed = []
+    for k, t in enumerate(cfg.stage_compute_s):
+        need = max(1, math.ceil(t / (b * bneck) - 1e-12))
+        trimmed.append(min(cfg.replica_count(k), need))
+    return replace(cfg, replicas=tuple(trimmed))
 
 
 # ---------------------------------------------------------------------------
@@ -404,10 +522,11 @@ class PartitionLattice:
                 continue
             inp = 0.0
             if r != self.cost.source:
+                nbytes = self.cost.batch_input_bytes
                 if not self.cons.transition_allowed(self.cost.source, r,
-                                                    self.cost.input_bytes):
+                                                    nbytes):
                     continue
-                inp = self._comm_cost(self.cost.source, r, self.cost.input_bytes)
+                inp = self._comm_cost(self.cost.source, r, nbytes)
             score = inp + self._step_cost(r, 0)
             push(frontier, (r, self._mask_with(0, r)),
                  (score, next(tie), r, self._mask_with(0, r), None))
@@ -475,17 +594,20 @@ class BottleneckLattice:
     """Exact min-bottleneck (max-throughput) DP — the minimax companion to
     :class:`PartitionLattice`.
 
-    Under pipelined serving the objective is ``max`` over stage compute and
-    hop comm times, which is not additive, so the Viterbi lattice's
-    sum-composition is not exact.  This DP works at *segment* granularity:
+    Under pipelined serving the objective is ``max`` over *effective* stage
+    periods (replica- and batch-adjusted compute, per-request comm), which
+    is not additive, so the Viterbi lattice's sum-composition is not exact.
+    This DP works at *segment* granularity:
 
         f(b, r, need) = k-best achievable bottlenecks over blocks b..B-1
                         when block b starts a new segment on resource r and
                         ``need`` is the set of must-use resources still owed
 
-    with minimax composition ``max(segment_time, hop_time, child)``.  Max is
-    monotone in the child value, so k-best per state is exact.  Complexity
-    O(B²·R²·K·2^M) for M must-use resources.
+    with minimax composition ``max(stage_period, hop_period, child)``.  Max
+    is monotone in the child value, so k-best per state is exact; replicas
+    and batch only rescale each state's local cost (the cost model's
+    ``stage_period`` / ``hop_period``), so the DP stays exact at every
+    operating point.  Complexity O(B²·R²·K·2^M) for M must-use resources.
 
     Like :class:`PartitionLattice`, the path-dependent constraints
     (``max_resource_time``, ``min_blocks_on``) are not part of the DP state;
@@ -539,18 +661,18 @@ class BottleneckLattice:
                 bit_r = self._bit(r)
                 # transitions are independent of the must-use mask — hoist
                 # the (end, r2) scan out of the need loop
-                term = self.cost.segment_time(r, b, B - 1) \
+                term = self.cost.stage_period(r, b, B - 1) \
                     if b + n_run >= B else None
                 trans: list[tuple] = []      # (base, end, rj, clear_bit)
                 for end in range(b, min(b + n_run, B - 1)):
                     nbytes = float(out_bytes[end])
-                    seg_t = self.cost.segment_time(r, b, end)
+                    seg_t = self.cost.stage_period(r, b, end)
                     for rj, r2 in enumerate(names):
                         if self.order[r2] <= self.order[r] or \
                                 not self.cons.transition_allowed(
                                     r, r2, nbytes):
                             continue
-                        base = max(seg_t, self.cost.comm(r, r2, nbytes))
+                        base = max(seg_t, self.cost.hop_period(r, r2, nbytes))
                         trans.append((base, end, rj, ~self._bit(r2)))
                 for need in range(self.full_mask + 1):
                     if need & bit_r:
@@ -576,11 +698,11 @@ class BottleneckLattice:
                 continue
             inp = 0.0
             if r != self.cost.source:
+                nbytes = self.cost.batch_input_bytes
                 if not self.cons.transition_allowed(
-                        self.cost.source, r, self.cost.input_bytes):
+                        self.cost.source, r, nbytes):
                     continue
-                inp = self.cost.comm(self.cost.source, r,
-                                     self.cost.input_bytes)
+                inp = self.cost.hop_period(self.cost.source, r, nbytes)
             for pos in range(len(entries)):
                 finals.append((max(entries[pos][0], inp), key, pos))
         finals.sort(key=lambda t: t[0])

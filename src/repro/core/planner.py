@@ -16,7 +16,7 @@ import os
 from dataclasses import dataclass, field
 
 from .bench import (BenchmarkDB, BenchmarkProvider, TimingProvider,
-                    benchmark_model)
+                    benchmark_batches, benchmark_model)
 from .graph import LayerGraph, fuse_blocks
 from .network import NetworkModel
 from .partition import PartitionConfig
@@ -37,28 +37,61 @@ class Scission:
         self._engines: dict[tuple[str, float], QueryEngine] = {}
 
     # -- Steps 1-3 -----------------------------------------------------------
-    def benchmark(self, graph: LayerGraph) -> BenchmarkDB:
+    def _set_db(self, db: BenchmarkDB) -> None:
+        """Install a model DB and drop that model's cached query engines —
+        an engine holds a direct reference to the DB it was built from, so
+        keeping it would price later queries against stale measurements."""
+        self._dbs[db.model] = db
+        self._engines = {k: v for k, v in self._engines.items()
+                         if k[0] != db.model}
+
+    def benchmark(self, graph: LayerGraph,
+                  batch_sizes: tuple[int, ...] = (1,)) -> BenchmarkDB:
+        """Steps 1-3.  ``batch_sizes`` > (1,) records a batch profile per
+        (block, resource) so throughput queries can price batched stages."""
         db = benchmark_model(graph, self.resources, self.provider,
-                             runs=self.runs)
-        self._dbs[graph.name] = db
+                             runs=self.runs, batch_sizes=batch_sizes)
+        self._set_db(db)
         return db
 
-    def benchmark_resource(self, graph: LayerGraph, resource) -> BenchmarkDB:
+    def benchmark_resource(self, graph: LayerGraph, resource,
+                           batch_sizes: tuple[int, ...] | None = None
+                           ) -> BenchmarkDB:
         """Incremental Step 3 for one newly-joined resource: existing
-        records are reused, only the new resource's blocks are measured."""
-        new = benchmark_model(graph, [resource], self.provider,
-                              runs=self.runs)
+        records are reused, only the new resource's blocks are measured.
+
+        The newcomer is measured at the same batch sizes as the existing
+        DB (or ``batch_sizes`` when given), so batched operating points
+        stay answerable after an elastic join.
+        """
         db = self._dbs.get(graph.name)
+        if batch_sizes is None:
+            batch_sizes = tuple(db.measured_batches(
+                [r.name for r in self.resources])) if db is not None else (1,)
+        new = benchmark_model(graph, [resource], self.provider,
+                              runs=self.runs, batch_sizes=batch_sizes)
         if db is None:
-            self._dbs[graph.name] = new
+            self._set_db(new)
             return new
         db.records[resource.name] = new.records[resource.name]
-        self._engines = {k: v for k, v in self._engines.items()
-                         if k[0] != graph.name}
+        self._set_db(db)
+        return db
+
+    def benchmark_batches(self, graph: LayerGraph,
+                          batch_sizes: tuple[int, ...]) -> BenchmarkDB:
+        """Incremental Step 3 over batch sizes: measure only the batches the
+        model's DB has not already profiled and merge them in place (the
+        batch-axis analogue of :meth:`benchmark_resource`)."""
+        db = self._dbs.get(graph.name)
+        if db is None:
+            return self.benchmark(graph, batch_sizes=batch_sizes)
+        benchmark_batches(db, graph, self.resources, self.provider,
+                          runs=self.runs, batch_sizes=batch_sizes)
+        self._set_db(db)
         return db
 
     def load(self, db: BenchmarkDB) -> None:
-        self._dbs[db.model] = db
+        self._set_db(db)
 
     def save(self, model: str, path: str) -> None:
         with open(path, "w") as f:
@@ -67,7 +100,7 @@ class Scission:
     def restore(self, path: str) -> BenchmarkDB:
         with open(path) as f:
             db = BenchmarkDB.from_json(f.read())
-        self._dbs[db.model] = db
+        self._set_db(db)
         return db
 
     # -- Steps 4-6 -----------------------------------------------------------

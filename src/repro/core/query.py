@@ -11,10 +11,16 @@ execution strategies, chosen automatically:
   :class:`BottleneckLattice`.
 
 Both return identically-shaped ranked :class:`PartitionConfig` lists, so the
-paper's experiments and the 1000-node fleet path share one API.  Beyond the
-single-objective ``run``, :meth:`QueryEngine.frontier` returns the Pareto
+paper's experiments and the 1000-node fleet path share one API.
+
+A query names one **operating point** — a batch size and a per-resource
+replica budget — and every cost is priced at that point from the DB's
+measured batch profiles.  Beyond the single-objective ``run``,
+:meth:`QueryEngine.frontier` sweeps the candidate operating points
+(measured batch sizes × replica budget) and returns the Pareto
 non-dominated set over (latency, throughput, transfer) — the trade-off
-surface deployments actually choose between.
+surface deployments actually choose between, from latency-at-batch-1 to
+throughput-at-max-batch with replicated stages.
 """
 
 from __future__ import annotations
@@ -29,28 +35,66 @@ from .partition import (BottleneckLattice, Constraints, CostModel, Objective,
                         ThroughputObjective, LATENCY, TRANSFER, THROUGHPUT,
                         PartitionConfig, PartitionLattice,
                         enumerate_partitions, ordered_pipelines,
-                        pareto_frontier, rank)
+                        pareto_frontier, rank, trim_replicas)
 from .resources import Resource
 
 EXHAUSTIVE_LIMIT = 200_000
+# enumerated-partition pools (and cost models) are cached per operating
+# point; a frontier sweep touches one per measured batch size, so keep a
+# small LRU rather than letting a long-lived engine accrete one ~200k-config
+# pool per (batch, replica-budget) key ever queried
+CACHE_POINTS = 8
+
+
+def _cache_get(cache: dict, key):
+    """Dict-as-LRU: hit moves the key to the back (most recent)."""
+    if key not in cache:
+        return None
+    val = cache.pop(key)
+    cache[key] = val
+    return val
+
+
+def _cache_put(cache: dict, key, val, limit: int = CACHE_POINTS):
+    cache.pop(key, None)
+    cache[key] = val
+    while len(cache) > limit:
+        cache.pop(next(iter(cache)))
+    return val
+
+
+def _op_key(cfg: PartitionConfig) -> tuple:
+    return (cfg.segments, cfg.batch_size, cfg.replicas)
 
 
 def _dedupe(configs: list[PartitionConfig]) -> list[PartitionConfig]:
     seen: set = set()
     out = []
     for cfg in configs:
-        if cfg.segments not in seen:
-            seen.add(cfg.segments)
+        k = _op_key(cfg)
+        if k not in seen:
+            seen.add(k)
             out.append(cfg)
     return out
 
 
 @dataclass
 class Query:
-    """A user query (paper Step 6 examples map 1:1 onto these fields)."""
+    """A user query (paper Step 6 examples map 1:1 onto these fields).
+
+    ``batch_size`` and ``replicas`` (a per-resource replica *budget*:
+    resource name -> max copies a stage placed there may use) select the
+    operating point ``run`` prices; ``batch_sizes`` optionally restricts
+    the operating points ``frontier`` sweeps (default: every batch size
+    the DB measured).
+    """
 
     objective: Objective = LATENCY
     top_n: int = 3
+    # operating point
+    batch_size: int = 1
+    replicas: dict[str, int] = field(default_factory=dict)
+    batch_sizes: tuple[int, ...] | None = None     # frontier sweep override
     # constraints
     must_use: tuple[str, ...] = ()
     exclude: tuple[str, ...] = ()
@@ -83,11 +127,56 @@ class QueryEngine:
 
     def __init__(self, db: BenchmarkDB, resources: list[Resource],
                  network: NetworkModel, source: str, input_bytes: float):
-        self.cost = CostModel(db=db, resources=resources, network=network,
-                              source=source, input_bytes=input_bytes)
+        self.db = db
         self.resources = resources
-        self._exhaustive_cache: list[PartitionConfig] | None = None
+        self.network = network
+        self.source = source
+        self.input_bytes = input_bytes
+        # cost models and enumeration caches are per operating point
+        # (batch size, replica budget) — the batch-1 single-replica model
+        # stays constructed eagerly as the legacy `.cost` view
+        self._costs: dict[tuple, CostModel] = {}
+        self.cost = self._cost_for()
+        self._exhaustive_cache: dict[tuple, list[PartitionConfig]] = {}
         self._restricted_cache: dict[tuple, list[PartitionConfig]] = {}
+
+    # -- operating points ----------------------------------------------------
+    @staticmethod
+    def _point_key(batch_size: int = 1,
+                   replicas: dict[str, int] | None = None) -> tuple:
+        return (batch_size, tuple(sorted((replicas or {}).items())))
+
+    def _cost_for(self, query: Query | None = None) -> CostModel:
+        batch = query.batch_size if query is not None else 1
+        reps = dict(query.replicas) if query is not None else {}
+        key = self._point_key(batch, reps)
+        cost = _cache_get(self._costs, key)
+        if cost is None:
+            cost = _cache_put(self._costs, key, CostModel(
+                db=self.db, resources=self.resources, network=self.network,
+                source=self.source, input_bytes=self.input_bytes,
+                batch_size=batch, replica_budget=reps))
+        return cost
+
+    def _frontier_batches(self, query: Query) -> list[int]:
+        """Batch sizes the frontier sweeps: an explicit ``Query.batch_sizes``
+        wins; otherwise every batch the DB measured for this engine's
+        resources (so a legacy batch-1 DB sweeps exactly the paper's single
+        operating point).  Same contract as ``run``: an unmeasurable
+        operating point is an error, not a silently-skipped candidate —
+        the profile cannot price it without extrapolating."""
+        names = [r.name for r in self.resources]
+        if query.batch_sizes is None:
+            return self.db.measured_batches(names)
+        max_batch = self.db.max_batch(names)
+        batches = sorted({int(b) for b in query.batch_sizes})
+        bad = [b for b in batches if not 1 <= b <= max_batch]
+        if bad:
+            raise ValueError(
+                f"requested batch_sizes {bad} are outside the measured "
+                f"range (1..{max_batch}) for model {self.db.model!r}; "
+                "re-run benchmark_model(batch_sizes=...) to cover them")
+        return batches
 
     # -- sizing -------------------------------------------------------------
     def _valid_pipelines(self, pipes) -> tuple[tuple[str, ...], ...]:
@@ -105,7 +194,7 @@ class QueryEngine:
     def _search_space(self, query: Query | None = None) -> int:
         """Number of configurations the query actually ranges over — honors
         a ``Query.pipelines`` restriction."""
-        B = self.cost.n_blocks
+        B = self.db.n_blocks
         pipes = ordered_pipelines(self.resources) \
             if query is None or query.pipelines is None \
             else self._valid_pipelines(query.pipelines)
@@ -121,54 +210,62 @@ class QueryEngine:
         query = query or Query()
         t0 = time.perf_counter()
         cons = query.constraints()
+        cost = self._cost_for(query)
         if self._search_space(query) <= EXHAUSTIVE_LIMIT:
-            configs = self._run_exhaustive(query, cons)
+            configs = self._run_exhaustive(query, cons, cost)
             strategy = "exhaustive"
         else:
-            configs = self._run_lattice(query, cons)
+            configs = self._run_lattice(query, cons, cost)
             strategy = "lattice"
         return QueryResult(configs=configs,
                            query_time_s=time.perf_counter() - t0,
                            strategy=strategy)
 
     def frontier(self, query: Query | None = None) -> QueryResult:
-        """Pareto non-dominated set over (latency, throughput, transfer).
+        """Pareto non-dominated set over (latency, throughput, transfer),
+        swept across operating points (measured batch sizes × the query's
+        replica budget).
 
-        Small spaces: exact — computed from the full (constraint-filtered)
-        enumeration.  Large spaces: assembled from k-best lattice solves
-        under each base objective and Pareto-filtered (a high-recall
-        approximation; every returned config is still non-dominated within
-        the candidate pool).  Results are sorted by latency.
+        Small spaces: exact within each operating point — computed from the
+        full (constraint-filtered) enumeration.  Large spaces: assembled
+        from k-best lattice solves under each base objective and
+        Pareto-filtered (a high-recall approximation; every returned config
+        is still non-dominated within the candidate pool).  Replica counts
+        of returned points are trimmed to the minimum achieving their
+        bottleneck.  Results are sorted by latency.
         """
         query = query or Query()
         t0 = time.perf_counter()
         cons = query.constraints()
-        if self._search_space(query) <= EXHAUSTIVE_LIMIT:
-            front = pareto_frontier(self._filtered_exhaustive(query, cons))
-            strategy = "exhaustive"
-        else:
-            width = max(query.top_n, 16)
-            cands: list[PartitionConfig] = []
-            for obj in (LATENCY, TRANSFER, THROUGHPUT):
-                q = replace(query, objective=obj, top_n=width)
-                cands.extend(self._run_lattice(q, cons))
-            front = pareto_frontier(_dedupe(cands))
-            strategy = "lattice"
+        exhaustive = self._search_space(query) <= EXHAUSTIVE_LIMIT
+        cands: list[PartitionConfig] = []
+        for batch in self._frontier_batches(query):
+            q = replace(query, batch_size=batch)
+            cost = self._cost_for(q)
+            if exhaustive:
+                cands.extend(self._filtered_exhaustive(q, cons, cost))
+            else:
+                width = max(query.top_n, 16)
+                for obj in (LATENCY, TRANSFER, THROUGHPUT):
+                    qq = replace(q, objective=obj, top_n=width)
+                    cands.extend(self._run_lattice(qq, cons, cost))
+        front = [trim_replicas(c) for c in pareto_frontier(_dedupe(cands))]
         front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
                                   c.transfer_bytes))
         return QueryResult(configs=front,
                            query_time_s=time.perf_counter() - t0,
-                           strategy=strategy)
+                           strategy="exhaustive" if exhaustive else "lattice")
 
-    def _lattice_for(self, cons: Constraints, objective: Objective):
+    def _lattice_for(self, cons: Constraints, objective: Objective,
+                     cost: CostModel):
         if isinstance(objective, ThroughputObjective):
-            return BottleneckLattice(self.cost, cons)
-        return PartitionLattice(self.cost, cons, objective)
+            return BottleneckLattice(cost, cons)
+        return PartitionLattice(cost, cons, objective)
 
-    def _run_lattice(self, query: Query,
-                     cons: Constraints) -> list[PartitionConfig]:
+    def _run_lattice(self, query: Query, cons: Constraints,
+                     cost: CostModel) -> list[PartitionConfig]:
         if query.pipelines is None:
-            return self._lattice_for(cons, query.objective).solve(
+            return self._lattice_for(cons, query.objective, cost).solve(
                 top_n=query.top_n)
         # Restrict the lattice to the requested pipelines: solving with
         # must_use == the pipe and everything else excluded admits exactly
@@ -188,43 +285,46 @@ class QueryEngine:
                 pin=query.pin, max_link_bytes=query.max_link_bytes,
                 max_resource_time=query.max_resource_time,
                 min_blocks_on=query.min_blocks_on)
-            merged.extend(self._lattice_for(pcons, query.objective)
+            merged.extend(self._lattice_for(pcons, query.objective, cost)
                           .solve(top_n=query.top_n))
         return rank(_dedupe(merged), query.objective, query.top_n)
 
-    def _run_exhaustive(self, query: Query,
-                        cons: Constraints) -> list[PartitionConfig]:
-        return rank(self._filtered_exhaustive(query, cons),
+    def _run_exhaustive(self, query: Query, cons: Constraints,
+                        cost: CostModel) -> list[PartitionConfig]:
+        return rank(self._filtered_exhaustive(query, cons, cost),
                     query.objective, query.top_n)
 
-    def _filtered_exhaustive(self, query: Query,
-                             cons: Constraints) -> list[PartitionConfig]:
+    def _filtered_exhaustive(self, query: Query, cons: Constraints,
+                             cost: CostModel) -> list[PartitionConfig]:
+        point = self._point_key(query.batch_size, query.replicas)
         if query.pipelines is not None and \
                 self._search_space() > EXHAUSTIVE_LIMIT:
             # only the restricted space is small — enumerate just those
             # pipelines instead of building the full cache (cached per
             # pipeline set so repeated queries stay inside the 50 ms budget)
             pipes = self._valid_pipelines(query.pipelines)
-            if pipes not in self._restricted_cache:
-                self._restricted_cache[pipes] = enumerate_partitions(
-                    self.cost, pipelines=pipes)
-            pool = self._restricted_cache[pipes]
+            ck = (point, pipes)
+            pool = _cache_get(self._restricted_cache, ck)
+            if pool is None:
+                pool = _cache_put(self._restricted_cache, ck,
+                                  enumerate_partitions(cost, pipelines=pipes))
         else:
-            if self._exhaustive_cache is None:
-                self._exhaustive_cache = enumerate_partitions(self.cost)
-            pool = self._exhaustive_cache
+            pool = _cache_get(self._exhaustive_cache, point)
+            if pool is None:
+                pool = _cache_put(self._exhaustive_cache, point,
+                                  enumerate_partitions(cost))
         out = []
         for cfg in pool:
             if query.pipelines is not None and \
                     cfg.resources not in query.pipelines:
                 continue
-            if not self._config_satisfies(cfg, cons):
+            if not self._config_satisfies(cfg, cons, cost):
                 continue
             out.append(cfg)
         return out
 
-    def _config_satisfies(self, cfg: PartitionConfig,
-                          cons: Constraints) -> bool:
+    def _config_satisfies(self, cfg: PartitionConfig, cons: Constraints,
+                          cost: CostModel) -> bool:
         used = set(cfg.resources)
         if any(m not in used for m in cons.must_use):
             return False
@@ -237,12 +337,12 @@ class QueryEngine:
                 return False
         for i, seg in enumerate(cfg.segments[:-1]):
             nxt = cfg.segments[i + 1]
-            nbytes = float(self.cost.out_bytes[seg.end])
+            nbytes = float(cost.out_bytes[seg.end])
             if not cons.transition_allowed(seg.resource, nxt.resource, nbytes):
                 return False
-        if cfg.segments[0].resource != self.cost.source:
-            if not cons.transition_allowed(self.cost.source,
+        if cfg.segments[0].resource != cost.source:
+            if not cons.transition_allowed(cost.source,
                                            cfg.segments[0].resource,
-                                           self.cost.input_bytes):
+                                           cost.batch_input_bytes):
                 return False
         return cons.path_feasible(cfg)

@@ -44,8 +44,20 @@ class PlanEvent:
     def throughput_rps(self) -> float:
         return self.config.throughput_rps
 
+    @property
+    def operating_point(self) -> tuple[int, tuple[int, ...]]:
+        """(batch size, per-stage replicas) the plan was priced at — lets
+        operators audit that re-plans preserved the serving operating
+        point."""
+        return (self.config.batch_size, self.config.replicas)
+
 
 class ElasticController:
+    """Re-plans on membership/network changes, preserving the active
+    operating point: every re-plan reuses the controller's query, so its
+    batch size and replica budget (and with them the serving engine's
+    admission width) survive resource loss, join, and bandwidth shifts."""
+
     def __init__(self, scission: Scission, model: str,
                  input_bytes: float = 150e3, query: Query | None = None,
                  graph=None):
@@ -72,7 +84,15 @@ class ElasticController:
 
     # -- operational changes --------------------------------------------------
     def on_resource_lost(self, name: str) -> PlanEvent:
-        """Node failure / maintenance drain: drop the resource, re-query."""
+        """Node failure / maintenance drain: drop the resource, re-query.
+
+        The query — and with it the active operating point (batch size and
+        replica budget) — is preserved untouched.  A budget entry for the
+        lost resource is inert while it is gone (only resources that appear
+        in a plan's segments are consulted) and becomes active again if the
+        resource rejoins, so a lose/rejoin cycle restores the original
+        operating point.
+        """
         remaining = [r for r in self.scission.resources if r.name != name]
         self.scission = self.scission.with_resources(remaining)
         return self._replan(f"lost:{name}")

@@ -54,38 +54,65 @@ def simulate_pipeline_throughput(config: PartitionConfig,
                                  n_requests: int = 128) -> float:
     """Steady-state request rate of a partition under pipelined serving.
 
-    Discrete-event simulation with the classic pipeline recurrence — request
-    ``i`` enters stage ``s`` when both the previous stage has produced it
-    and the stage has finished request ``i-1``:
+    Discrete-event simulation with the classic pipeline recurrence — the
+    unit in flight is one *batch* of ``config.batch_size`` requests, and a
+    compute stage with ``replicas[k]`` copies round-robins batches over its
+    servers: batch ``i`` enters stage ``s`` when the previous stage has
+    produced it and server ``i % replicas`` has finished batch
+    ``i - replicas``:
 
-        finish[i][s] = max(finish[i][s-1], finish[i-1][s]) + stage_time[s]
+        finish[i][s] = max(finish[i][s-1], finish[i-replicas_s][s])
+                       + stage_time[s]
 
     Stages are the input hop (if any), then compute segments interleaved
-    with inter-stage comm hops.  The measured rate converges to the cost
-    model's ``1 / bottleneck_s`` prediction; benchmarks/bench_partitions.py
-    uses this to validate predicted vs. simulated throughput.
+    with inter-stage comm hops; hops are single-server (the link is the
+    server).  The measured request rate (batch rate × batch size) converges
+    to the cost model's ``1 / bottleneck_s`` prediction;
+    benchmarks/bench_partitions.py uses this to validate predicted vs.
+    simulated throughput.
+
+    Raises ``ValueError`` for ``n_requests < 2`` or a config with no
+    pipeline stages — there is no steady state to measure, and the old
+    ``inf`` return silently poisoned predicted-vs-simulated comparisons.
     """
-    stages: list[float] = []
+    if n_requests < 2:
+        raise ValueError(
+            f"need at least 2 requests to measure a steady-state rate, "
+            f"got n_requests={n_requests}")
+    batch = max(1, config.batch_size)
+    stages: list[tuple[float, int]] = []       # (per-batch time, replicas)
     if config.input_comm_s > 0.0:
-        stages.append(config.input_comm_s)
+        stages.append((config.input_comm_s, 1))
     for k, t in enumerate(config.stage_compute_s):
-        stages.append(t)
+        stages.append((t, config.replica_count(k)))
         if k < len(config.stage_comm_s):
-            stages.append(config.stage_comm_s[k])
-    if not stages or n_requests < 2:
-        return float("inf")
-    finish = [0.0] * len(stages)
+            stages.append((config.stage_comm_s[k], 1))
+    if not stages:
+        raise ValueError(
+            "config has no pipeline stages (no stage_compute_s/input hop); "
+            "evaluate it through CostModel.evaluate before simulating")
+    # enough batches that every replica set wraps around several times —
+    # fewer and the measured span can be zero (all in-flight batches finish
+    # simultaneously on distinct servers, no steady state yet)
+    max_reps = max(reps for _, reps in stages)
+    n_batches = max(2, 4 * max_reps, -(-n_requests // batch))
+    finish = [[0.0] * reps for _, reps in stages]
     done: list[float] = []
-    for _ in range(n_requests):
+    for i in range(n_batches):
         prev = 0.0
-        for s, dt in enumerate(stages):
-            finish[s] = max(prev, finish[s]) + dt
-            prev = finish[s]
+        for s, (dt, reps) in enumerate(stages):
+            srv = i % reps
+            finish[s][srv] = max(prev, finish[s][srv]) + dt
+            prev = finish[s][srv]
         done.append(prev)
     # measure the steady-state rate over the second half (skip fill-up)
     half = len(done) // 2
     span = done[-1] - done[half - 1]
-    return (len(done) - half) / span if span > 0 else float("inf")
+    if span <= 0.0:
+        raise ValueError(
+            "steady-state span is zero (every stage time is zero?) — "
+            "cannot measure a finite pipeline rate")
+    return (len(done) - half) / span * batch
 
 
 @dataclass
@@ -132,11 +159,24 @@ class KVCachePool:
 
 
 class ServingEngine:
-    def __init__(self, model, params, *, width: int = 4, max_len: int = 256,
-                 eos_id: int | None = None):
+    """Continuous-batching engine, optionally driven by a Scission
+    operating point: constructing with ``config=`` (a
+    :class:`PartitionConfig`, e.g. a frontier point) sets the admission
+    width to the operating point's batch size, so the engine admits exactly
+    the concurrency the cost model priced.  An explicit ``width`` always
+    wins."""
+
+    def __init__(self, model, params, *, width: int | None = None,
+                 max_len: int = 256, eos_id: int | None = None,
+                 config: PartitionConfig | None = None):
+        if width is None:
+            width = config.batch_size if config is not None else 4
+        if width < 1:
+            raise ValueError(f"admission width must be >= 1, got {width}")
         self.model = model
         self.cfg = model.cfg
         self.params = params
+        self.config = config
         self.width = width
         self.max_len = max_len
         self.eos_id = eos_id

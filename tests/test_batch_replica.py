@@ -1,0 +1,519 @@
+"""Batch-indexed benchmark profiles, replica-aware stage rates, and
+frontier-driven operating points (the batch/replica cost-model refactor)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticProvider, BenchmarkDB, BlockBenchmark,
+                        BottleneckLattice, CostModel, Link, NetworkModel,
+                        Query, QueryEngine, Resource, Scission, Segment,
+                        THROUGHPUT, benchmark_model, enumerate_partitions,
+                        linear_graph, rank, trim_replicas)
+from repro.core.bench import SCHEMA_VERSION, _interp_profile
+from repro.core.graph import LayerNode
+from repro.core.network import paper_network, THREE_G
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+from repro.runtime.elastic import ElasticController
+from repro.serving.engine import simulate_pipeline_throughput
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def make_model(n=8, d=64, name="toy"):
+    layers = []
+    for i in range(n):
+        w = jax.random.normal(jax.random.PRNGKey(i), (d, d)) * 0.1
+        layers.append(LayerNode(name=f"fc{i}", kind="dense",
+                                apply=lambda x, w=w: jnp.tanh(x @ w),
+                                flops=2.0 * d * d, param_bytes=4 * d * d))
+    return linear_graph(name, _spec(1, d), layers)
+
+
+def _resources():
+    return [Resource("device", "device", RPI4, speed_factor=30.0),
+            Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0),
+            Resource("cloud", "cloud", CLOUD_VM, speed_factor=1.0)]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    graph = make_model()
+    resources = _resources()
+    db = benchmark_model(graph, resources, AnalyticProvider(), runs=1,
+                         batch_sizes=(1, 4, 16))
+    net = paper_network(THREE_G, edges=("edge1",), clouds=("cloud",))
+    return graph, resources, db, net
+
+
+# ---------------------------------------------------------------------------
+# benchmark DB: profiles, interpolation, schema versions
+# ---------------------------------------------------------------------------
+
+class TestBatchProfiles:
+    def test_profile_measured_points(self, setup):
+        _, _, db, _ = setup
+        assert db.measured_batches() == [1, 4, 16]
+        assert db.max_batch() == 16
+        rec = db.records["device"][0]
+        assert set(rec.batch_profile) == {1, 4, 16}
+        # batch-1 scalars mirror the profile's batch-1 point
+        assert rec.batch_profile[1] == (rec.mean_time_s, rec.output_bytes)
+
+    def test_time_exact_at_measured_batches(self, setup):
+        _, _, db, _ = setup
+        rec = db.records["device"][0]
+        for b in (1, 4, 16):
+            assert db.time("device", 0, batch=b) == \
+                pytest.approx(rec.batch_profile[b][0])
+
+    def test_time_interpolates_between_measured(self, setup):
+        _, _, db, _ = setup
+        t4 = db.time("device", 0, batch=4)
+        t16 = db.time("device", 0, batch=16)
+        t8 = db.time("device", 0, batch=8)
+        assert min(t4, t16) <= t8 <= max(t4, t16)
+        # strictly between when the profile is strictly monotone
+        if t4 < t16:
+            assert t4 < t8 < t16
+
+    def test_time_clamps_never_extrapolates(self, setup):
+        _, _, db, _ = setup
+        assert db.time("device", 0, batch=64) == \
+            pytest.approx(db.time("device", 0, batch=16))
+        assert db.time("device", 0, batch=1) == \
+            pytest.approx(db.records["device"][0].mean_time_s)
+
+    def test_output_bytes_scale_with_batch(self, setup):
+        _, _, db, _ = setup
+        per_req = db.output_bytes(0)
+        assert db.output_bytes(0, batch=4) == 4 * per_req
+        np.testing.assert_allclose(db.out_bytes_vector(batch=4),
+                                   4 * db.out_bytes_vector())
+
+    def test_interp_log_linear_midpoint(self):
+        # log-linear: at the geometric midpoint of the batch range the value
+        # is the geometric mean of the endpoint values
+        profile = {1: (1.0, 10), 16: (4.0, 160)}
+        assert _interp_profile(profile, 4) == pytest.approx(2.0)
+
+    def test_measured_batches_ignores_stale_resources(self, setup):
+        """Regression: a departed resource's stale batch-1-only records
+        must not mask batches the active testbed did measure (the global
+        intersection collapsed to {1} and upgrade loops never converged)."""
+        _, resources, db, net = setup
+        db2 = BenchmarkDB.from_json(db.to_json())
+        db2.records["old_edge"] = [
+            BlockBenchmark(block=r.block, resource="old_edge",
+                           mean_time_s=r.mean_time_s, std_time_s=0.0,
+                           output_bytes=r.output_bytes, runs=1)
+            for r in db2.records["device"]]
+        assert db2.measured_batches() == [1]        # global intersection
+        names = [r.name for r in resources]
+        assert db2.measured_batches(names) == [1, 4, 16]
+        assert db2.max_batch(names) == 16
+        # an engine over the live testbed still sweeps the full profile and
+        # accepts its operating points
+        eng = QueryEngine(db2, resources, net, source="device",
+                          input_bytes=150e3)
+        assert eng._frontier_batches(Query()) == [1, 4, 16]
+        assert eng.run(Query(top_n=1, batch_size=16)).best.batch_size == 16
+
+    def test_operating_point_caches_bounded(self, setup):
+        _, resources, db, net = setup
+        from repro.core.query import CACHE_POINTS
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        for n in range(2, CACHE_POINTS + 6):
+            eng.run(Query(top_n=1, replicas={"device": n}))
+        assert len(eng._costs) <= CACHE_POINTS
+        assert len(eng._exhaustive_cache) <= CACHE_POINTS
+
+    def test_benchmark_model_always_measures_batch_one(self, setup):
+        graph, resources, _, _ = setup
+        db = benchmark_model(graph, resources[:1], AnalyticProvider(),
+                             runs=1, batch_sizes=(8,))
+        assert db.measured_batches() == [1, 8]
+
+    def test_benchmark_model_rejects_bad_batches(self, setup):
+        graph, resources, _, _ = setup
+        with pytest.raises(ValueError, match="batch sizes"):
+            benchmark_model(graph, resources[:1], AnalyticProvider(),
+                            runs=1, batch_sizes=(0,))
+
+    def test_benchmark_batches_incremental_merge(self, setup):
+        """Regression: upgrading a cached DB with new batch sizes used to
+        re-time the whole sweep; the incremental path measures only the
+        missing batches and leaves existing profile points untouched."""
+        graph, resources, _, _ = setup
+
+        class Counting(AnalyticProvider):
+            calls: list = []
+
+            def measure(self, block, resource, runs, batch=1):
+                Counting.calls.append(batch)
+                return super().measure(block, resource, runs, batch=batch)
+
+        from repro.core import benchmark_batches
+        db = benchmark_model(graph, resources[:1], Counting(), runs=1,
+                             batch_sizes=(1, 4))
+        before = {b: dict(r.batch_profile)
+                  for b, r in enumerate(db.records["device"])}
+        Counting.calls = []
+        benchmark_batches(db, graph, resources[:1], Counting(), runs=1,
+                          batch_sizes=(4, 8))
+        assert set(Counting.calls) == {8}          # 4 already measured
+        assert db.measured_batches() == [1, 4, 8]
+        for b, rec in enumerate(db.records["device"]):
+            for batch, point in before[b].items():  # old points untouched
+                assert rec.batch_profile[batch] == point
+        with pytest.raises(KeyError, match="edge1"):
+            benchmark_batches(db, graph, resources[:2], Counting(), runs=1,
+                              batch_sizes=(8,))
+
+    def test_legacy_provider_without_batch_kwarg(self, setup):
+        graph, resources, _, _ = setup
+
+        class Legacy:
+            def measure(self, block, resource, runs):
+                return 1e-3, 0.0, 0.0, 0.0
+
+        db = benchmark_model(graph, resources[:1], Legacy(), runs=1)
+        assert db.measured_batches() == [1]
+        with pytest.raises(TypeError, match="batch"):
+            benchmark_model(graph, resources[:1], Legacy(), runs=1,
+                            batch_sizes=(1, 4))
+
+
+class TestSchemaVersions:
+    def test_v2_roundtrip_bit_exact(self, setup):
+        _, _, db, _ = setup
+        s = db.to_json()
+        assert json.loads(s)["schema_version"] == SCHEMA_VERSION
+        db2 = BenchmarkDB.from_json(s)
+        assert db2.to_json() == s
+        for r, recs in db.records.items():
+            for a, b in zip(recs, db2.records[r]):
+                assert a == b
+
+    def test_v1_loads_as_batch1_profile(self, setup):
+        _, _, db, _ = setup
+        payload = json.loads(db.to_json())
+        payload.pop("schema_version")           # v1: implicit version
+        for recs in payload["records"].values():
+            for rec in recs:
+                rec.pop("batch_profile")
+        old = BenchmarkDB.from_json(json.dumps(payload))
+        assert old.measured_batches() == [1]
+        for r in old.records:
+            for a, b in zip(old.records[r], db.records[r]):
+                assert a.mean_time_s == b.mean_time_s
+                assert a.output_bytes == b.output_bytes
+                assert a.batch_profile == {1: (b.mean_time_s,
+                                               b.output_bytes)}
+        # batch queries against a migrated DB clamp to the batch-1 point
+        assert old.time("device", 0, batch=8) == \
+            pytest.approx(old.time("device", 0))
+
+    def test_future_schema_rejected(self, setup):
+        _, _, db, _ = setup
+        payload = json.loads(db.to_json())
+        payload["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema_version"):
+            BenchmarkDB.from_json(json.dumps(payload))
+
+    def test_empty_db_output_bytes_clear_error(self):
+        db = BenchmarkDB(model="empty", n_blocks=3)
+        with pytest.raises(KeyError, match="no records"):
+            db.output_bytes(0)
+
+
+# ---------------------------------------------------------------------------
+# replica/batch-aware cost model
+# ---------------------------------------------------------------------------
+
+class TestEffectiveRates:
+    def test_bottleneck_divides_by_replicas_and_batch(self, setup):
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3, batch_size=4,
+                         replica_budget={"device": 3, "cloud": 2})
+        B = db.n_blocks
+        cfg = cost.evaluate([Segment("device", 0, 3),
+                             Segment("cloud", 4, B - 1)])
+        assert cfg.batch_size == 4 and cfg.replicas == (3, 2)
+        dev_t = sum(db.time("device", b, 4) for b in range(4))
+        cld_t = sum(db.time("cloud", b, 4) for b in range(4, B))
+        hop = net.comm_time("device", "cloud", db.output_bytes(3, batch=4))
+        periods = [dev_t / (3 * 4), cld_t / (2 * 4), hop / 4]
+        assert cfg.bottleneck_s == pytest.approx(max(periods))
+        assert cfg.throughput_rps == pytest.approx(1.0 / max(periods))
+        # latency stays the per-batch end-to-end time (replicas don't help)
+        assert cfg.latency_s == pytest.approx(dev_t + cld_t + hop)
+
+    def test_batch1_single_replica_unchanged(self, setup):
+        _, resources, db, net = setup
+        plain = CostModel(db=db, resources=resources, network=net,
+                          source="device", input_bytes=150e3)
+        cfg = plain.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        assert cfg.batch_size == 1 and cfg.replicas == (1,)
+        assert cfg.bottleneck_s == pytest.approx(
+            sum(cfg.compute_s.values()))
+
+    def test_replicas_never_hurt_throughput(self, setup):
+        _, resources, db, net = setup
+        base = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3)
+        repl = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3,
+                         replica_budget={"device": 4})
+        for a, b in zip(enumerate_partitions(base),
+                        enumerate_partitions(repl)):
+            assert b.throughput_rps >= a.throughput_rps - 1e-12
+            assert b.latency_s == pytest.approx(a.latency_s)
+
+    def test_invalid_operating_points_rejected(self, setup):
+        _, resources, db, net = setup
+        with pytest.raises(ValueError, match="batch_size"):
+            CostModel(db=db, resources=resources, network=net,
+                      source="device", input_bytes=1.0, batch_size=0)
+        with pytest.raises(ValueError, match="replica budget"):
+            CostModel(db=db, resources=resources, network=net,
+                      source="device", input_bytes=1.0,
+                      replica_budget={"device": 0})
+
+    def test_batch_beyond_measured_rejected(self, setup):
+        """Regression: pricing batch b from a profile clamped at max_batch
+        would divide the clamped time by b — linear throughput extrapolation
+        the measurements don't support.  The operating point is refused."""
+        _, resources, db, net = setup
+        with pytest.raises(ValueError, match="largest measured batch"):
+            CostModel(db=db, resources=resources, network=net,
+                      source="device", input_bytes=1.0, batch_size=64)
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        with pytest.raises(ValueError, match="largest measured batch"):
+            eng.run(Query(batch_size=64))
+        # frontier applies the same fail-fast contract to explicit sweeps —
+        # a silently-dropped candidate would read as "evaluated and
+        # dominated" when it was never priced at all
+        with pytest.raises(ValueError, match="outside the measured"):
+            eng.frontier(Query(batch_sizes=(1, 64)))
+
+    @pytest.mark.parametrize("batch,budget", [
+        (1, {"device": 2}),
+        (4, {}),
+        (4, {"device": 2, "edge1": 3}),
+        (16, {"cloud": 2}),
+    ])
+    def test_dp_matches_oracle_at_operating_point(self, setup, batch, budget):
+        """The min-bottleneck DP stays exact when batch and replicas only
+        rescale each state's local cost."""
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3,
+                         batch_size=batch, replica_budget=budget)
+        oracle = rank(enumerate_partitions(cost), THROUGHPUT)[0]
+        got = BottleneckLattice(cost).solve(top_n=1)[0]
+        assert got.bottleneck_s == pytest.approx(oracle.bottleneck_s)
+
+    def test_trim_replicas_keeps_bottleneck(self, setup):
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3,
+                         replica_budget={"device": 8, "cloud": 8})
+        for cfg in enumerate_partitions(cost):
+            trimmed = trim_replicas(cfg)
+            assert trimmed.bottleneck_s == pytest.approx(cfg.bottleneck_s)
+            assert all(t <= r for t, r in zip(trimmed.replicas,
+                                              cfg.replicas))
+
+
+# ---------------------------------------------------------------------------
+# frontier operating points + acceptance criterion
+# ---------------------------------------------------------------------------
+
+class TestFrontierOperatingPoints:
+    def test_frontier_spans_batch_sizes(self, setup):
+        _, resources, db, net = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        res = eng.frontier(Query(replicas={"device": 2}))
+        batches = {c.batch_size for c in res.configs}
+        assert 1 in batches                     # latency-at-batch-1 end
+        assert len(batches) > 1                 # ...through batched points
+        lats = [c.latency_s for c in res.configs]
+        assert lats == sorted(lats)
+
+    def test_frontier_default_sweeps_measured_batches_only(self, setup):
+        _, resources, db, net = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        res = eng.frontier(Query())
+        assert {c.batch_size for c in res.configs} <= \
+            set(db.measured_batches())
+
+    def test_acceptance_batched_replicated_beats_batch1(self, setup):
+        """Acceptance: the frontier contains a replicated or batched
+        operating point whose predicted throughput beats the best batch-1
+        single-replica partition, and the simulation confirms the
+        prediction within 15%."""
+        _, resources, db, net = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        base = eng.run(Query(top_n=1, objective=THROUGHPUT)).best
+        assert base.batch_size == 1 and set(base.replicas) <= {1}
+        res = eng.frontier(Query(replicas={"device": 2, "edge1": 2,
+                                           "cloud": 2}))
+        top = max(res.configs, key=lambda c: c.throughput_rps)
+        assert top.batch_size > 1 or any(r > 1 for r in top.replicas)
+        assert top.throughput_rps > base.throughput_rps
+        sim = simulate_pipeline_throughput(top, n_requests=512)
+        assert sim == pytest.approx(top.throughput_rps, rel=0.15)
+
+    def test_run_at_operating_point(self, setup):
+        _, resources, db, net = setup
+        eng = QueryEngine(db, resources, net, source="device",
+                          input_bytes=150e3)
+        res = eng.run(Query(top_n=1, objective=THROUGHPUT, batch_size=16,
+                            replicas={"device": 2}))
+        best = res.best
+        assert best.batch_size == 16
+        base = eng.run(Query(top_n=1, objective=THROUGHPUT)).best
+        assert best.throughput_rps >= base.throughput_rps
+
+
+# ---------------------------------------------------------------------------
+# replica-aware pipeline simulation
+# ---------------------------------------------------------------------------
+
+class TestSimulation:
+    def test_rejects_too_few_requests(self, setup):
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3)
+        cfg = cost.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        for n in (0, 1, -3):
+            with pytest.raises(ValueError, match="n_requests"):
+                simulate_pipeline_throughput(cfg, n_requests=n)
+
+    def test_rejects_stageless_config(self):
+        from repro.core.partition import PartitionConfig
+        bare = PartitionConfig(model="x", segments=(), latency_s=1.0,
+                               compute_s={}, comm_s=0.0, transfer_bytes=0.0)
+        with pytest.raises(ValueError, match="stages"):
+            simulate_pipeline_throughput(bare)
+
+    def test_replicated_minimal_requests_finite(self, setup):
+        """Regression: with replicas > 1 and very few requests, every
+        in-flight batch could finish simultaneously on distinct servers and
+        the measured span collapsed to zero -> inf; the simulator must run
+        the pipeline long enough to reach a steady state instead."""
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3,
+                         replica_budget={"device": 2})
+        cfg = cost.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        sim = simulate_pipeline_throughput(cfg, n_requests=2)
+        assert np.isfinite(sim)
+        assert sim == pytest.approx(cfg.throughput_rps, rel=0.02)
+
+    def test_replicated_stage_rate_matches_prediction(self, setup):
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3,
+                         replica_budget={"device": 3})
+        cfg = cost.evaluate([Segment("device", 0, db.n_blocks - 1)])
+        sim = simulate_pipeline_throughput(cfg, n_requests=512)
+        assert sim == pytest.approx(cfg.throughput_rps, rel=0.02)
+        # three device replicas triple the native rate
+        single = CostModel(db=db, resources=resources, network=net,
+                           source="device", input_bytes=150e3).evaluate(
+            [Segment("device", 0, db.n_blocks - 1)])
+        assert cfg.throughput_rps == pytest.approx(
+            3 * single.throughput_rps)
+
+    def test_batched_sim_counts_requests_not_batches(self, setup):
+        _, resources, db, net = setup
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source="device", input_bytes=150e3, batch_size=16)
+        B = db.n_blocks
+        cfg = cost.evaluate([Segment("device", 0, 3),
+                             Segment("cloud", 4, B - 1)])
+        sim = simulate_pipeline_throughput(cfg, n_requests=1024)
+        assert sim == pytest.approx(cfg.throughput_rps, rel=0.02)
+
+
+# ---------------------------------------------------------------------------
+# planner: re-benchmarking must invalidate cached engines
+# ---------------------------------------------------------------------------
+
+class TestEngineInvalidation:
+    def test_rebenchmark_invalidates_cached_engines(self, setup):
+        """Regression: Scission.benchmark()/load()/restore() replaced the
+        model DB but kept cached QueryEngines holding the old one, so a
+        re-benchmark (e.g. adding batch profiles) silently priced later
+        queries from stale measurements."""
+        graph, resources, _, net = setup
+        s = Scission(resources=list(resources), network=net, source="device",
+                     provider=AnalyticProvider(), runs=1)
+        s.benchmark(graph)                        # batch-1 only
+        assert s.frontier(graph.name).configs     # builds + caches an engine
+        with pytest.raises(ValueError, match="largest measured batch"):
+            s.query(graph.name, Query(batch_size=4))
+        s.benchmark(graph, batch_sizes=(1, 4))    # upgrade the profile
+        best = s.query(graph.name, Query(top_n=1, objective=THROUGHPUT,
+                                         batch_size=4)).best
+        assert best.batch_size == 4               # new engine, new DB
+
+
+# ---------------------------------------------------------------------------
+# elastic re-planning preserves the operating point
+# ---------------------------------------------------------------------------
+
+class TestElasticOperatingPoint:
+    def _scission(self, setup):
+        graph, resources, db, net = setup
+        s = Scission(resources=list(resources), network=net, source="device",
+                     provider=AnalyticProvider(), runs=1)
+        s.load(db)
+        return graph, s
+
+    def test_replan_preserves_batch_and_replicas(self, setup):
+        graph, s = self._scission(setup)
+        budget = {"device": 2, "edge1": 2}
+        ctl = ElasticController(
+            s, graph.name, query=Query(top_n=1, objective=THROUGHPUT,
+                                       batch_size=4, replicas=budget),
+            graph=graph)
+        assert ctl.current.batch_size == 4
+        ev = ctl.on_resource_lost("edge1")
+        assert ev.config.batch_size == 4          # operating point survives
+        assert all(s.resource != "edge1" for s in ev.config.segments)
+        # the budget (including the lost resource's entry) is untouched, so
+        # a rejoin restores the full operating point
+        assert ctl.query.replicas == {"device": 2, "edge1": 2}
+        assert budget == {"device": 2, "edge1": 2}   # caller's dict intact
+        batch, reps = ev.operating_point
+        assert batch == 4 and len(reps) == len(ev.config.segments)
+        ev2 = ctl.on_resource_joined(
+            Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0))
+        assert ev2.config.batch_size == 4
+        assert ev2.config.bottleneck_s == pytest.approx(
+            ctl.history[0].config.bottleneck_s)
+
+    def test_join_measures_existing_batches(self, setup):
+        graph, s = self._scission(setup)
+        ctl = ElasticController(
+            s, graph.name, query=Query(top_n=1, batch_size=16), graph=graph)
+        newcomer = Resource("edge9", "edge", EDGE_BOX_1, speed_factor=2.0)
+        ev = ctl.on_resource_joined(newcomer)
+        db = ctl.scission._dbs[graph.name]
+        rec = db.records["edge9"][0]
+        assert set(rec.batch_profile) == {1, 4, 16}
+        assert ev.config.batch_size == 16

@@ -73,6 +73,43 @@ def test_block_chain_equals_graph(g):
 
 
 # ---------------------------------------------------------------------------
+# benchmark-profile invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def monotone_profile(draw):
+    """A measured batch profile whose per-batch time is monotone
+    non-decreasing in batch size (larger batches never finish faster)."""
+    batches = sorted(draw(st.sets(st.integers(1, 512), min_size=2,
+                                  max_size=6)))
+    deltas = draw(st.lists(st.floats(0.0, 1.0), min_size=len(batches),
+                           max_size=len(batches)))
+    t = draw(st.floats(1e-6, 1e-2))
+    profile = {}
+    for b, d in zip(batches, deltas):
+        t += d * 1e-3
+        profile[b] = (t, b * 1000)
+    return profile
+
+
+@given(monotone_profile(), st.integers(1, 1024), st.integers(1, 1024))
+@settings(max_examples=60, deadline=None)
+def test_interpolated_times_monotone_in_batch(profile, b1, b2):
+    """Log-linear interpolation preserves monotonicity of the measured
+    profile (and clamps outside the measured range)."""
+    from repro.core.bench import _interp_profile
+    lo, hi = min(b1, b2), max(b1, b2)
+    t_lo = _interp_profile(profile, lo)
+    t_hi = _interp_profile(profile, hi)
+    assert t_lo <= t_hi + 1e-12
+    bs = sorted(profile)
+    assert _interp_profile(profile, bs[-1] + 100) == \
+        pytest.approx(profile[bs[-1]][0])
+    values = [profile[b][0] for b in bs]
+    assert min(values) - 1e-12 <= t_lo <= max(values) + 1e-12
+
+
+# ---------------------------------------------------------------------------
 # partitioning invariants
 # ---------------------------------------------------------------------------
 

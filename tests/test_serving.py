@@ -86,6 +86,26 @@ class TestEngine:
         for r, w in zip(done, want):
             assert r.tokens == w, (r.rid, r.tokens, w)
 
+    def test_width_from_operating_point(self, small_model):
+        """An engine built from a Scission operating point admits exactly
+        the batch size the cost model priced."""
+        from repro.core.partition import PartitionConfig, Segment
+        cfg, model, params = small_model
+        point = PartitionConfig(
+            model="lm", segments=(Segment("cloud", 0, 3),), latency_s=0.1,
+            compute_s={"cloud": 0.1}, comm_s=0.0, transfer_bytes=0.0,
+            stage_compute_s=(0.1,), batch_size=3, replicas=(2,))
+        eng = ServingEngine(model, params, max_len=32, config=point)
+        assert eng.width == 3
+        assert eng.pool.width == 3
+        assert eng.config is point
+        # explicit width always wins over the operating point
+        eng2 = ServingEngine(model, params, width=2, max_len=32,
+                             config=point)
+        assert eng2.width == 2
+        with pytest.raises(ValueError, match="width"):
+            ServingEngine(model, params, width=0, max_len=32)
+
     def test_slot_reuse_more_requests_than_width(self, small_model):
         cfg, model, params = small_model
         eng = ServingEngine(model, params, width=1, max_len=32)
