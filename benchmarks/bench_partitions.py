@@ -15,6 +15,13 @@ Run standalone in smoke mode for CI::
     # if predicted vs simulated throughput diverges by more than 25%:
     PYTHONPATH=src python -m benchmarks.bench_partitions --smoke-batched \
         --out results/bench_partitions_smoke_batched.json
+
+    # frontier exactness + scaling: fails unless the ParetoLattice frontier
+    # equals the exhaustive frontier (vector-set equality) on the paper
+    # networks x operating points, and the fleet-sized frontier query
+    # stays interactive (label statistics land in the JSON artifact):
+    PYTHONPATH=src python -m benchmarks.bench_partitions --smoke-frontier \
+        --out results/bench_partitions_smoke_frontier.json
 """
 
 from __future__ import annotations
@@ -25,9 +32,10 @@ import os
 import time
 
 from repro.core import Query, LATENCY, THROUGHPUT
+from repro.core import objective_vector as _vec
 from repro.serving.engine import simulate_pipeline_throughput
 
-from .common import benchmark_cached, scission_for, testbed
+from .common import benchmark_cached, fleet_engine, scission_for, testbed
 
 
 def _best(scission, model, query=None, input_bytes=150e3):
@@ -186,6 +194,110 @@ def scenario_frontier(quick=True, models=None):
     return rows
 
 
+def _frontiers_match(a, b, rtol=1e-9):
+    """Vector-set equality of two frontiers (objective vectors matched
+    within ``rtol``, both directions)."""
+    va = sorted({_vec(c) for c in a})
+    vb = sorted({_vec(c) for c in b})
+    if len(va) != len(vb):
+        return False
+    return all(all(abs(x - y) <= rtol * max(abs(x), abs(y), 1e-30)
+                   for x, y in zip(p, q)) for p, q in zip(va, vb))
+
+
+def scenario_frontier_exact(quick=True, models=None, batch_sizes=(1, 4),
+                            replicas=None):
+    """Frontier exactness: the ParetoLattice strategy must return the same
+    objective-vector set as the exhaustive oracle — across 3G/4G/wired,
+    operating points (measured batches × a replica budget), a must-use
+    constraint, and overlapping restricted pipelines.  Mismatches
+    accumulate in ``scenario_frontier_exact.failures`` so smoke mode turns
+    them into a non-zero exit code."""
+    print("\n# Frontier exactness — ParetoLattice vs exhaustive oracle")
+    scenario_frontier_exact.failures = []
+    rows = []
+    models = models or ["MobileNetV2"]
+    replicas = replicas if replicas is not None else \
+        {"device": 2, "edge1": 2}
+    queries = {
+        "free": Query(batch_sizes=tuple(batch_sizes), replicas=replicas),
+        "must": Query(batch_sizes=tuple(batch_sizes), replicas=replicas,
+                      must_use=("device", "edge1", "cloud_gpu")),
+        "pipes": Query(batch_sizes=tuple(batch_sizes), replicas=replicas,
+                       pipelines=(("device", "edge1"),
+                                  ("device", "edge1", "cloud_gpu"),
+                                  ("device", "cloud_gpu"))),
+    }
+    for net in ("3g", "4g", "wired"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m, batch_sizes=batch_sizes)
+            for qname, q in queries.items():
+                exh = s.frontier(m, q, strategy="exhaustive")
+                lat = s.frontier(m, q, strategy="lattice")
+                equal = _frontiers_match(exh.configs, lat.configs)
+                ok = "PASS" if equal else "FAIL"
+                if not equal:
+                    scenario_frontier_exact.failures.append(
+                        f"{net}/{m}/{qname}")
+                print(f"  [{net}] {m}/{qname}: front={len(exh.configs)} "
+                      f"exh={exh.query_time_s * 1e3:.1f}ms "
+                      f"lat={lat.query_time_s * 1e3:.1f}ms "
+                      f"labels={lat.labels_kept}+{lat.labels_pruned} {ok}")
+                rows.append((f"front_exact/{net}/{m}/{qname}",
+                             lat.query_time_s * 1e6, len(lat.configs)))
+                rows.append((f"front_exact_oracle/{net}/{m}/{qname}",
+                             exh.query_time_s * 1e6, len(exh.configs)))
+                rows.append((f"front_labels/{net}/{m}/{qname}",
+                             float(lat.labels_kept),
+                             int(lat.labels_pruned)))
+    return rows
+
+
+scenario_frontier_exact.failures = []
+
+# fleet-sized frontier queries must stay interactive; the measured path is
+# ~0.5 s on a 27-resource / 32-block fleet (~350k-config space), so 5 s is
+# a generous regression tripwire rather than a tight bound
+FLEET_FRONTIER_BUDGET_S = 5.0
+
+
+def scenario_frontier_scale(quick=True, n_per_tier=9, n_blocks=32):
+    """Frontier query-time scaling on a fleet-sized resource set (search
+    space beyond EXHAUSTIVE_LIMIT, where only the lattice strategy is
+    viable), with label-set statistics and the ε-dominance knob."""
+    print("\n# Frontier scaling — fleet-sized space (lattice only)")
+    scenario_frontier_scale.failures = []
+    rows = []
+    eng = fleet_engine(n_per_tier=n_per_tier, n_blocks=n_blocks)
+    space = eng._search_space()
+    n_res = len(eng.resources)
+    print(f"  fleet: {n_res} resources x {eng.db.n_blocks} blocks, "
+          f"search space {space} configs")
+    rows.append(("front_scale/space", 0.0, space))
+    import repro.core.query as query_mod
+    assert space > query_mod.EXHAUSTIVE_LIMIT, \
+        "fleet scenario must exceed the exhaustive limit"
+    for eps in ((0.0, 0.05) if quick else (0.0, 0.01, 0.05)):
+        res = eng.frontier(Query(frontier_epsilon=eps))
+        ok = "PASS" if res.query_time_s < FLEET_FRONTIER_BUDGET_S else "FAIL"
+        if ok == "FAIL":
+            scenario_frontier_scale.failures.append(
+                f"fleet/eps={eps}: {res.query_time_s:.2f}s "
+                f"> {FLEET_FRONTIER_BUDGET_S}s")
+        print(f"  [eps={eps}] {res.query_time_s * 1e3:.0f}ms "
+              f"front={len(res.configs)} labels_kept={res.labels_kept} "
+              f"labels_pruned={res.labels_pruned} ({res.strategy}) {ok}")
+        rows.append((f"front_scale/eps{eps}", res.query_time_s * 1e6,
+                     len(res.configs)))
+        rows.append((f"front_scale_labels/eps{eps}",
+                     float(res.labels_kept), int(res.labels_pruned)))
+    return rows
+
+
+scenario_frontier_scale.failures = []
+
+
 def scenario_batched(quick=True, models=None, batch_sizes=(1, 4),
                      replicas=None):
     """Beyond-paper: batched + replicated operating points.  Benchmarks a
@@ -254,6 +366,8 @@ def run(quick: bool = True):
     rows += scenario_throughput(quick)
     rows += scenario_frontier(quick)
     rows += scenario_batched(quick)
+    rows += scenario_frontier_exact(quick)
+    rows += scenario_frontier_scale(quick)
     return rows
 
 
@@ -263,6 +377,18 @@ def smoke_batched():
     return scenario_batched(quick=True, models=["MobileNetV2"],
                             batch_sizes=(1, 4),
                             replicas={"device": 2, "edge1": 2})
+
+
+def smoke_frontier():
+    """CI pass for frontier exactness + scaling: gates on lattice-vs-
+    exhaustive frontier vector-set equality (paper-network spaces across
+    3G/4G/wired and operating points) and on the fleet-sized frontier
+    staying interactive, with label statistics in the JSON artifact."""
+    rows = scenario_frontier_exact(quick=True, models=["MobileNetV2"],
+                                   batch_sizes=(1, 4),
+                                   replicas={"device": 2, "edge1": 2})
+    rows += scenario_frontier_scale(quick=True)
+    return rows
 
 
 def smoke():
@@ -287,12 +413,17 @@ def main() -> None:
     ap.add_argument("--smoke-batched", action="store_true",
                     help="single-model CI pass over the batched/replicated "
                          "path (two batch sizes, replicated stages)")
+    ap.add_argument("--smoke-frontier", action="store_true",
+                    help="CI pass gated on lattice-vs-exhaustive frontier "
+                         "equality plus fleet-sized query-time scaling")
     ap.add_argument("--full", action="store_true", help="all models")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     args = ap.parse_args()
     if args.smoke_batched:
         rows = smoke_batched()
+    elif args.smoke_frontier:
+        rows = smoke_frontier()
     elif args.smoke:
         rows = smoke()
     else:
@@ -306,10 +437,12 @@ def main() -> None:
             json.dump([{"name": n, "us_per_call": us, "derived": d}
                        for n, us, d in rows], f, indent=2)
         print(f"wrote {args.out}")
-    failures = scenario_throughput.failures + scenario_batched.failures
+    failures = (scenario_throughput.failures + scenario_batched.failures
+                + scenario_frontier_exact.failures
+                + scenario_frontier_scale.failures)
     if failures:
-        print(f"FAILED predicted-vs-simulated throughput validation: "
-              f"{', '.join(failures)}")
+        print(f"FAILED validation (throughput / frontier exactness / "
+              f"frontier scaling): {', '.join(failures)}")
         raise SystemExit(1)
 
 

@@ -12,8 +12,10 @@ from __future__ import annotations
 
 import os
 
-from repro.core import (Link, Resource, Scission, TimingProvider,
-                        paper_network, THREE_G, FOUR_G, WIRED)
+from repro.core import (AnalyticProvider, Link, NetworkModel, QueryEngine,
+                        Resource, Scission, TimingProvider, benchmark_model,
+                        linear_graph, paper_network, THREE_G, FOUR_G, WIRED)
+from repro.core.graph import LayerNode
 from repro.core.resources import (CLOUD_VM, EDGE_BOX_1, EDGE_BOX_2, GTX_1070,
                                   RPI4)
 from repro.models import cnn_zoo
@@ -60,6 +62,50 @@ def scission_for(network_name: str = "4g",
                                      if r.tier == "cloud"))
     return Scission(resources=res, network=net, source="device",
                     provider=TimingProvider(), runs=5)
+
+
+def fleet_testbed(n_per_tier: int = 9) -> list[Resource]:
+    """A fleet-sized resource set: ``n_per_tier`` heterogeneous resources
+    per tier (slightly different speed factors), for search spaces beyond
+    ``EXHAUSTIVE_LIMIT`` where only the lattice strategies are viable."""
+    res: list[Resource] = []
+    for i in range(n_per_tier):
+        res.append(Resource(f"device{i}", "device", RPI4,
+                            speed_factor=8.0 + i * 0.37))
+        res.append(Resource(f"edge{i}", "edge", EDGE_BOX_1,
+                            speed_factor=1.6 + i * 0.21))
+        res.append(Resource(f"cloud{i}", "cloud", CLOUD_VM,
+                            speed_factor=0.5 + i * 0.13))
+    return res
+
+
+def fleet_engine(n_per_tier: int = 9, n_blocks: int = 32,
+                 network_name: str = "4g",
+                 input_bytes: float = 150e3) -> QueryEngine:
+    """A QueryEngine over a synthetic ``n_blocks``-block model benchmarked
+    (analytically, for speed) on :func:`fleet_testbed` — the fleet-scale
+    query-path benchmark substrate.  With the defaults the search space is
+    ~350k configs, past the exhaustive limit."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(n_blocks)
+    layers = []
+    for i in range(n_blocks):
+        d = int(rng.integers(4, 16)) * 2
+        layers.append(LayerNode(
+            f"l{i}", "dense",
+            apply=lambda x, d=d: jnp.tile(x[..., :1], (1, d)),
+            flops=float(rng.integers(1, 100)) * 1e7))
+    graph = linear_graph(f"fleet{n_blocks}",
+                         jax.ShapeDtypeStruct((1, 8), jnp.float32), layers)
+    resources = fleet_testbed(n_per_tier)
+    db = benchmark_model(graph, resources, AnalyticProvider(), runs=1)
+    link = NETWORKS[network_name]
+    net = NetworkModel(default=link)
+    return QueryEngine(db, resources, net, source="device0",
+                       input_bytes=input_bytes)
 
 
 def benchmark_cached(scission: Scission, model_name: str,

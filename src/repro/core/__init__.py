@@ -12,7 +12,8 @@ from .bench import (BenchmarkDB, BlockBenchmark, TimingProvider,
 from .partition import (Segment, PartitionConfig, CostModel, Objective,
                         ThroughputObjective, LATENCY, TRANSFER, THROUGHPUT,
                         Constraints, PartitionLattice, BottleneckLattice,
-                        enumerate_partitions, ordered_pipelines, rank,
+                        ParetoLattice, enumerate_partitions,
+                        objective_vector, ordered_pipelines, rank,
                         pareto_frontier, dominates, trim_replicas)
 from .query import Query, QueryEngine, QueryResult
 from .planner import Scission
@@ -27,8 +28,8 @@ __all__ = [
     "AnalyticProvider", "benchmark_model", "benchmark_batches",
     "Segment", "PartitionConfig", "CostModel", "Objective",
     "ThroughputObjective", "LATENCY", "TRANSFER", "THROUGHPUT",
-    "Constraints", "PartitionLattice", "BottleneckLattice",
-    "enumerate_partitions", "ordered_pipelines", "rank",
+    "Constraints", "PartitionLattice", "BottleneckLattice", "ParetoLattice",
+    "enumerate_partitions", "objective_vector", "ordered_pipelines", "rank",
     "pareto_frontier", "dominates", "trim_replicas",
     "Query", "QueryEngine", "QueryResult", "Scission",
 ]

@@ -59,9 +59,12 @@ class NetworkModel:
         return self
 
     def link(self, src: str, dst: str) -> Link:
-        if src == dst:
-            return LOOPBACK
-        return self._links.get((src, dst), self._default)
+        hit = self._links.get((src, dst))
+        if hit is not None:
+            return hit
+        # an explicit (src, src) entry models a real same-box staging cost
+        # (e.g. host <-> accelerator); only *implicit* self-links are free
+        return LOOPBACK if src == dst else self._default
 
     def comm_time(self, src: str, dst: str, nbytes: float) -> float:
         return self.link(src, dst).comm_time(nbytes)

@@ -17,6 +17,15 @@ Two engines over the same cost model:
   *max* over stage/hop times, not their sum, so the additive Viterbi
   lattice is not exact; this DP works at segment granularity with minimax
   composition instead.
+* :class:`ParetoLattice` — the exact multi-objective companion: a
+  label-correcting DP over the same (block, resource, must-use-mask)
+  states where each state keeps its full **non-dominated set** of vector
+  labels over (latency, bottleneck, transfer) instead of a scalar k-best
+  list.  Latency/transfer compose additively and the bottleneck by
+  minimax — all monotone — so per-state dominance pruning is exact and
+  ``QueryEngine.frontier`` no longer has to approximate the trade-off
+  surface from three single-objective k-best solves on fleet-sized
+  spaces.  An optional ε-dominance knob bounds label-set growth.
 
 Cost model (paper's two assumptions, validated in tests/test_bench.py):
 
@@ -46,7 +55,7 @@ extremes), so batching economies are priced empirically, not assumed.
 
 from __future__ import annotations
 
-import heapq
+import bisect
 import itertools
 import math
 from dataclasses import dataclass, field, replace
@@ -382,9 +391,16 @@ def trim_replicas(cfg: PartitionConfig) -> PartitionConfig:
 # Pareto frontier over (latency, throughput, transfer)
 # ---------------------------------------------------------------------------
 
-def _objective_vector(cfg: PartitionConfig) -> tuple[float, float, float]:
-    # all three minimised: bottleneck_s stands in for -throughput
+def objective_vector(cfg: PartitionConfig) -> tuple[float, float, float]:
+    """The canonical minimised objective vector of the frontier machinery:
+    (latency_s, bottleneck_s, transfer_bytes) — ``bottleneck_s`` stands in
+    for -throughput.  Every frontier comparison (Pareto filters, elastic
+    ``frontier_shift``, bench equality gates) goes through this one
+    definition."""
     return (cfg.latency_s, cfg.bottleneck_s, cfg.transfer_bytes)
+
+
+_objective_vector = objective_vector        # internal alias
 
 
 def dominates(a: PartitionConfig, b: PartitionConfig) -> bool:
@@ -466,7 +482,40 @@ class Constraints:
         return True
 
 
-class PartitionLattice:
+class _LatticeBase:
+    """State shared by every lattice DP: the exclude-filtered resource
+    list, tier ordering, and the must-use bit mask.
+
+    A ``must_use`` entry naming a resource that is unknown or excluded is
+    **unsatisfiable**: no path can ever visit it, so ``infeasible`` is set
+    and every ``solve`` returns ``[]`` — exactly what the exhaustive
+    strategy does (it rejects every config), keeping the strategies
+    consistent instead of silently dropping the constraint.
+    """
+
+    def __init__(self, cost: CostModel,
+                 constraints: Constraints | None = None):
+        self.cost = cost
+        self.cons = constraints or Constraints()
+        self.res = [r for r in cost.resources
+                    if r.name not in self.cons.exclude]
+        self.names = [r.name for r in self.res]
+        self.order = {r.name: r.order for r in self.res}
+        self.must = [n for n in self.cons.must_use if n in self.names]
+        self.must_idx = {n: i for i, n in enumerate(self.must)}
+        self.full_mask = (1 << len(self.must)) - 1
+        self.infeasible = any(n not in self.names
+                              for n in self.cons.must_use)
+
+    def _bit(self, resource: str) -> int:
+        i = self.must_idx.get(resource)
+        return 0 if i is None else 1 << i
+
+    def _mask_with(self, mask: int, resource: str) -> int:
+        return mask | self._bit(resource)
+
+
+class PartitionLattice(_LatticeBase):
     """Viterbi over (block, resource, used-mask) with k-best extraction.
 
     Transitions: stay on the same resource (free) or hand off to a strictly
@@ -477,19 +526,8 @@ class PartitionLattice:
 
     def __init__(self, cost: CostModel, constraints: Constraints | None = None,
                  objective: Objective = LATENCY):
-        self.cost = cost
-        self.cons = constraints or Constraints()
+        super().__init__(cost, constraints)
         self.obj = objective
-        self.res = [r for r in cost.resources if r.name not in self.cons.exclude]
-        self.names = [r.name for r in self.res]
-        self.order = {r.name: r.order for r in self.res}
-        self.must = [n for n in self.cons.must_use if n in self.names]
-        self.must_idx = {n: i for i, n in enumerate(self.must)}
-        self.full_mask = (1 << len(self.must)) - 1
-
-    def _mask_with(self, mask: int, resource: str) -> int:
-        i = self.must_idx.get(resource)
-        return mask | (1 << i) if i is not None else mask
 
     def _step_cost(self, resource: str, block: int) -> float:
         t = self.cost.segment_time(resource, block, block)
@@ -499,9 +537,27 @@ class PartitionLattice:
         return (self.obj.w_latency * self.cost.comm(src, dst, nbytes)
                 + self.obj.w_transfer_per_mb * nbytes / 1e6)
 
+    @staticmethod
+    def _push(store: dict, key, entry, k: int) -> None:
+        """Bounded-sorted insertion of ``entry`` into ``store[key]``.
+
+        Entries are (score, tie, ...) tuples with a unique tie counter, so
+        tuple comparison never reaches the non-comparable tail; a full
+        re-sort per insertion (O(K log K) per relaxed edge) is replaced by
+        a rejection test plus one O(K) ``bisect.insort``.
+        """
+        lst = store.setdefault(key, [])
+        if len(lst) >= k:
+            if entry[0] >= lst[-1][0]:
+                return                   # cannot enter a full list
+            del lst[-1]
+        bisect.insort(lst, entry)
+
     def solve(self, top_n: int = 1) -> list[PartitionConfig]:
         """k-best paths through the lattice; returns up to ``top_n`` feasible
         configs ranked by the objective."""
+        if top_n <= 0 or self.infeasible:
+            return []
         B = self.cost.n_blocks
         K = max(top_n * 4, top_n + 4)   # head-room for path-feasibility filter
         # state -> list of (score, path) ; path = tuple of resource per block
@@ -510,12 +566,7 @@ class PartitionLattice:
         Entry = tuple  # (score, tie, resource, mask, parent)
         frontier: dict[tuple[str, int], list[Entry]] = {}
         tie = itertools.count()
-
-        def push(store: dict, key, entry, k=K):
-            lst = store.setdefault(key, [])
-            lst.append(entry)
-            lst.sort(key=lambda e: e[0])
-            del lst[k:]
+        push = self._push
 
         for r in self.names:
             if not self.cons.allowed(0, r):
@@ -529,7 +580,7 @@ class PartitionLattice:
                 inp = self._comm_cost(self.cost.source, r, nbytes)
             score = inp + self._step_cost(r, 0)
             push(frontier, (r, self._mask_with(0, r)),
-                 (score, next(tie), r, self._mask_with(0, r), None))
+                 (score, next(tie), r, self._mask_with(0, r), None), K)
 
         for b in range(1, B):
             nxt: dict[tuple[str, int], list[Entry]] = {}
@@ -539,7 +590,8 @@ class PartitionLattice:
                     # stay
                     if self.cons.allowed(b, r):
                         push(nxt, (r, mask),
-                             (e[0] + self._step_cost(r, b), next(tie), r, mask, e))
+                             (e[0] + self._step_cost(r, b), next(tie), r,
+                              mask, e), K)
                     # hand off to a later tier
                     for r2 in self.names:
                         if self.order[r2] <= self.order[r] or \
@@ -549,7 +601,7 @@ class PartitionLattice:
                         m2 = self._mask_with(mask, r2)
                         sc = e[0] + self._comm_cost(r, r2, nbytes) \
                             + self._step_cost(r2, b)
-                        push(nxt, (r2, m2), (sc, next(tie), r2, m2, e))
+                        push(nxt, (r2, m2), (sc, next(tie), r2, m2, e), K)
             frontier = nxt
 
         finals: list[Entry] = []
@@ -590,7 +642,7 @@ class PartitionLattice:
         return tuple(segs)
 
 
-class BottleneckLattice:
+class BottleneckLattice(_LatticeBase):
     """Exact min-bottleneck (max-throughput) DP — the minimax companion to
     :class:`PartitionLattice`.
 
@@ -615,24 +667,18 @@ class BottleneckLattice:
     when such a constraint is present but remains an approximation: a
     constraint binding enough to reject the whole pool yields fewer (or no)
     results rather than a suboptimal-but-feasible one.
+
+    Ties on the bottleneck value are broken by end-to-end latency across
+    the *entire* reconstruction pool (every tied final is reconstructed
+    before truncating to ``top_n``).  Ties that exceed a single state's
+    k-best pool width can still be cut inside the DP — when the exact tied
+    surface matters, :class:`ParetoLattice` returns it: the minimum
+    (bottleneck, latency) point is always on the Pareto frontier.
     """
 
-    def __init__(self, cost: CostModel,
-                 constraints: Constraints | None = None):
-        self.cost = cost
-        self.cons = constraints or Constraints()
-        self.res = [r for r in cost.resources if r.name not in self.cons.exclude]
-        self.names = [r.name for r in self.res]
-        self.order = {r.name: r.order for r in self.res}
-        self.must = [n for n in self.cons.must_use if n in self.names]
-        self.must_idx = {n: i for i, n in enumerate(self.must)}
-        self.full_mask = (1 << len(self.must)) - 1
-
-    def _bit(self, resource: str) -> int:
-        i = self.must_idx.get(resource)
-        return 0 if i is None else 1 << i
-
     def solve(self, top_n: int = 1) -> list[PartitionConfig]:
+        if top_n <= 0 or self.infeasible:
+            return []
         B = self.cost.n_blocks
         K = max(top_n * 4, top_n + 4)   # head-room for path-feasibility filter
         if self.cons.max_resource_time or self.cons.min_blocks_on:
@@ -707,9 +753,18 @@ class BottleneckLattice:
                 finals.append((max(entries[pos][0], inp), key, pos))
         finals.sort(key=lambda t: t[0])
 
+        # ties in bottleneck are common (e.g. the input hop dominates), so
+        # truncating the reconstruction pool before the (bottleneck,
+        # latency) tie-break could cut a lower-latency config and return a
+        # strictly worse one.  Reconstruct until we hold top_n feasible
+        # configs AND the next candidate's value exceeds the top_n-th best
+        # bottleneck — i.e. collect every bottleneck-tied candidate first.
         out: list[PartitionConfig] = []
         seen: set[tuple[Segment, ...]] = set()
-        for _, key, pos in finals:
+        kth = math.inf                  # top_n-th smallest kept bottleneck
+        for val, key, pos in finals:
+            if len(out) >= top_n and val > kth * (1 + 1e-12) + 1e-18:
+                break
             segs = self._reconstruct(memo, key, pos)
             if segs in seen:
                 continue
@@ -717,10 +772,8 @@ class BottleneckLattice:
             cfg = self.cost.evaluate(segs)
             if self.cons.path_feasible(cfg):
                 out.append(cfg)
-            if len(out) >= top_n * 2:
-                break
-        # ties in bottleneck are common (e.g. the input hop dominates);
-        # break them by end-to-end latency for deterministic, useful output
+                if len(out) >= top_n:
+                    kth = sorted(c.bottleneck_s for c in out)[top_n - 1]
         out.sort(key=lambda c: (c.bottleneck_s, c.latency_s))
         return out[:top_n]
 
@@ -733,3 +786,211 @@ class BottleneckLattice:
             if child_key is None:
                 return tuple(segs)
             key, pos, start = child_key, child_pos, end + 1
+
+
+def _nondominated_rows(pts: np.ndarray, eps: float = 0.0) -> np.ndarray:
+    """Indices of rows of ``pts`` (every column minimised) surviving
+    dominance pruning, ascending.
+
+    Exact-duplicate rows collapse to one representative.  With ``eps == 0``
+    the filter is exact: a row is pruned iff some distinct row is <= in
+    every column.  With ``eps > 0`` a row is additionally pruned when a
+    *kept* row is within a factor (1+eps) in every column (multiplicative
+    ε-dominance, applied greedily in lexicographic order so mutually
+    ε-close rows keep exactly one representative).
+    """
+    n = len(pts)
+    if n <= 1:
+        return np.arange(n)
+    uniq, first = np.unique(pts, axis=0, return_index=True)
+    if len(uniq) <= 1024:
+        # pairwise filter: le[i, j] == row j dominates-or-equals row i;
+        # rows are distinct after np.unique, so any hit off the diagonal
+        # is strict somewhere
+        le = (uniq[None, :, :] <= uniq[:, None, :]).all(-1)
+        np.fill_diagonal(le, False)
+        alive = ~le.any(axis=1)
+        uniq, first = uniq[alive], first[alive]
+    if eps > 0.0 or len(uniq) > 1024:
+        # sequential sweep in lexicographic order: every exact dominator of
+        # a row sorts before it, so checking against kept rows is exact at
+        # eps == 0 and the canonical greedy archive at eps > 0 (pre-pruning
+        # exact-dominated rows above cannot hurt coverage — any dominator
+        # of a pruned row is itself within the ε bound of a kept row)
+        scale = 1.0 + eps
+        kept = np.empty_like(uniq)
+        kcount = 0
+        keep_list: list[int] = []
+        for u, i in zip(uniq, first):
+            if kcount and (kept[:kcount] <= u * scale).all(axis=1).any():
+                continue
+            kept[kcount] = u
+            kcount += 1
+            keep_list.append(int(i))
+        first = np.asarray(keep_list, dtype=np.intp)
+    return np.sort(first)
+
+
+class ParetoLattice(_LatticeBase):
+    """Exact Pareto-frontier extraction over (latency, bottleneck, transfer).
+
+    A label-correcting DP over the same (block, resource, must-use-mask)
+    states as :class:`PartitionLattice`, except each state keeps its full
+    **non-dominated set** of vector labels
+
+        (latency_so_far, bottleneck_of_closed_stages, transfer_so_far,
+         open_segment_time)
+
+    instead of a scalar k-best list.  Latency and transfer compose
+    additively, the closed-stage bottleneck by minimax, and the open
+    segment's eventual stage period is monotone in its accumulated time —
+    all monotone operators — so per-state dominance pruning is exact: no
+    genuinely non-dominated operating point can be lost, which the
+    three-objective k-best union used by ``QueryEngine.frontier`` before
+    this class could not guarantee.  Distinct paths with identical labels
+    collapse to one representative, so the result carries one config per
+    frontier *vector* (the exhaustive oracle may hold several tied
+    configs with equal objectives).
+
+    ``epsilon`` > 0 enables multiplicative ε-dominance pruning to bound
+    label-set growth on fleet-sized spaces: a label is also dropped when a
+    kept label is within a factor (1+ε) in every component.  Relative
+    error composes through the additive/minimax operators, so every
+    exact-front point has a returned point within (1+ε)^S of it in every
+    objective (S = blocks on the path; far tighter in practice).  The
+    default 0.0 is exact.  ``labels_kept`` / ``labels_pruned`` record the
+    label-set statistics across all states of the last :meth:`solve`.
+
+    Constraints: ``must_use`` (via the mask), ``exclude``/``pin`` (via
+    ``allowed``) and ``max_link_bytes`` (via ``transition_allowed``) are
+    exact in the DP.  The path-dependent ``max_resource_time`` /
+    ``min_blocks_on`` are enforced by post-filtering reconstructed
+    configs — same stance as the other lattices, and the exhaustive
+    strategy remains the oracle for those.
+    """
+
+    def __init__(self, cost: CostModel,
+                 constraints: Constraints | None = None,
+                 epsilon: float = 0.0):
+        if epsilon < 0.0:
+            raise ValueError(f"epsilon must be >= 0, got {epsilon}")
+        super().__init__(cost, constraints)
+        self.epsilon = float(epsilon)
+        self.labels_kept = 0
+        self.labels_pruned = 0
+
+    def _div(self, resource: str) -> float:
+        """Per-request divisor of a compute stage on ``resource`` — the
+        label's open-segment time over this is its eventual stage period."""
+        return self.cost.replicas_for(resource) * self.cost.batch_size
+
+    def solve(self) -> list[PartitionConfig]:
+        """The exact (ε = 0) non-dominated set of configurations, sorted by
+        (latency, bottleneck, transfer)."""
+        cost = self.cost
+        B = cost.n_blocks
+        self.labels_kept = self.labels_pruned = 0
+        if self.infeasible:
+            return []
+        # state -> ((L, 4) label array, parallel [(prev_key, prev_idx)])
+        cur: dict[tuple[str, int], tuple[np.ndarray, list]] = {}
+        for r in self.names:
+            if not self.cons.allowed(0, r):
+                continue
+            lat = bneck = xfer = 0.0
+            if r != cost.source:
+                nbytes = cost.batch_input_bytes
+                if not self.cons.transition_allowed(cost.source, r, nbytes):
+                    continue
+                lat = cost.comm(cost.source, r, nbytes)
+                bneck = cost.hop_period(cost.source, r, nbytes)
+                xfer = nbytes
+            step = cost.segment_time(r, 0, 0)
+            cur[(r, self._mask_with(0, r))] = (
+                np.array([[lat + step, bneck, xfer, step]]), [(None, -1)])
+        hist = [cur]
+        for b in range(1, B):
+            nbytes = float(cost.out_bytes[b - 1])
+            groups: dict[tuple[str, int], list] = {}
+            for (r, mask), (arr, metas) in cur.items():
+                refs = [((r, mask), i) for i in range(len(metas))]
+                if self.cons.allowed(b, r):        # extend the open segment
+                    step = cost.segment_time(r, b, b)
+                    groups.setdefault((r, mask), []).append(
+                        (arr + np.array([step, 0.0, 0.0, step]), refs))
+                div = self._div(r)
+                for r2 in self.names:              # close it and hand off
+                    if self.order[r2] <= self.order[r] or \
+                            not self.cons.allowed(b, r2) or \
+                            not self.cons.transition_allowed(r, r2, nbytes):
+                        continue
+                    hop = cost.comm(r, r2, nbytes)
+                    hop_p = cost.hop_period(r, r2, nbytes)
+                    step2 = cost.segment_time(r2, b, b)
+                    a2 = np.empty_like(arr)
+                    a2[:, 0] = arr[:, 0] + (hop + step2)
+                    a2[:, 1] = np.maximum(
+                        np.maximum(arr[:, 1], arr[:, 3] / div), hop_p)
+                    a2[:, 2] = arr[:, 2] + nbytes
+                    a2[:, 3] = step2
+                    groups.setdefault((r2, self._mask_with(mask, r2)),
+                                      []).append((a2, refs))
+            cur = {}
+            for key, chunks in groups.items():
+                arr = chunks[0][0] if len(chunks) == 1 else \
+                    np.concatenate([c[0] for c in chunks])
+                metas = [m for c in chunks for m in c[1]]
+                keep = _nondominated_rows(arr, self.epsilon)
+                self.labels_kept += len(keep)
+                self.labels_pruned += len(arr) - len(keep)
+                cur[key] = (arr[keep], [metas[i] for i in keep])
+            hist.append(cur)
+
+        # close every final open segment and filter the completed vectors
+        finals: list[tuple[tuple[str, int], int]] = []
+        vecs: list[np.ndarray] = []
+        for (r, mask), (arr, metas) in cur.items():
+            if mask != self.full_mask:
+                continue
+            vec = np.empty((len(arr), 3))
+            vec[:, 0] = arr[:, 0]
+            vec[:, 1] = np.maximum(arr[:, 1], arr[:, 3] / self._div(r))
+            vec[:, 2] = arr[:, 2]
+            for i in range(len(arr)):
+                finals.append(((r, mask), i))
+                vecs.append(vec[i])
+        if not finals:
+            return []
+        keep = _nondominated_rows(np.stack(vecs), 0.0)
+        out: list[PartitionConfig] = []
+        seen: set[tuple[Segment, ...]] = set()
+        for i in keep:
+            key, idx = finals[i]
+            segs = self._reconstruct(hist, key, idx)
+            if segs in seen:
+                continue
+            seen.add(segs)
+            cfg = cost.evaluate(segs)
+            if self.cons.path_feasible(cfg):
+                out.append(cfg)
+        # authoritative filter on the re-evaluated configs (path-dependent
+        # constraints may have removed members; evaluate() is the single
+        # source of truth for the objective vectors)
+        out = pareto_frontier(out)
+        out.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
+                                c.transfer_bytes))
+        return out
+
+    def _reconstruct(self, hist, key, idx) -> tuple[Segment, ...]:
+        path: list[str] = []
+        for b in range(len(hist) - 1, -1, -1):
+            path.append(key[0])
+            key, idx = hist[b][key][1][idx]
+        path.reverse()
+        segs: list[Segment] = []
+        start = 0
+        for i in range(1, len(path) + 1):
+            if i == len(path) or path[i] != path[start]:
+                segs.append(Segment(path[start], start, i - 1))
+                start = i
+        return tuple(segs)

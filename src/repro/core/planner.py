@@ -121,9 +121,16 @@ class Scission:
         return self.query(model, Query(top_n=1), input_bytes).best
 
     def frontier(self, model: str, query: Query | None = None,
-                 input_bytes: float = 150e3) -> QueryResult:
-        """Pareto non-dominated set over (latency, throughput, transfer)."""
-        return self.engine(model, input_bytes).frontier(query)
+                 input_bytes: float = 150e3,
+                 strategy: str | None = None) -> QueryResult:
+        """Pareto non-dominated set over (latency, throughput, transfer).
+
+        ``strategy`` forces the execution strategy ("exhaustive" keeps the
+        validation-oracle enumeration, "lattice" the exact
+        :class:`ParetoLattice` path); default picks by search-space size.
+        """
+        return self.engine(model, input_bytes).frontier(query,
+                                                        strategy=strategy)
 
     # -- operational changes (motivation (vi), elastic runtime hook) ---------
     def with_resources(self, resources: list[Resource]) -> "Scission":

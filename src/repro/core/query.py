@@ -8,7 +8,8 @@ execution strategies, chosen automatically:
   exhaustive enumeration + filter (the paper's own strategy);
 * large spaces: the k-best :class:`PartitionLattice` — or, for the
   throughput objective (a max, not a sum), the exact minimax
-  :class:`BottleneckLattice`.
+  :class:`BottleneckLattice` — and, for :meth:`QueryEngine.frontier`,
+  the exact non-dominated-label :class:`ParetoLattice`.
 
 Both return identically-shaped ranked :class:`PartitionConfig` lists, so the
 paper's experiments and the 1000-node fleet path share one API.
@@ -32,8 +33,8 @@ from dataclasses import dataclass, field, replace
 from .bench import BenchmarkDB
 from .network import NetworkModel
 from .partition import (BottleneckLattice, Constraints, CostModel, Objective,
-                        ThroughputObjective, LATENCY, TRANSFER, THROUGHPUT,
-                        PartitionConfig, PartitionLattice,
+                        ThroughputObjective, LATENCY,
+                        ParetoLattice, PartitionConfig, PartitionLattice,
                         enumerate_partitions, ordered_pipelines,
                         pareto_frontier, rank, trim_replicas)
 from .resources import Resource
@@ -86,7 +87,9 @@ class Query:
     resource name -> max copies a stage placed there may use) select the
     operating point ``run`` prices; ``batch_sizes`` optionally restricts
     the operating points ``frontier`` sweeps (default: every batch size
-    the DB measured).
+    the DB measured).  ``frontier_epsilon`` is the lattice frontier's
+    ε-dominance knob (0.0 == exact; > 0 bounds label-set growth on
+    fleet-sized spaces at a bounded relative error).
     """
 
     objective: Objective = LATENCY
@@ -95,6 +98,7 @@ class Query:
     batch_size: int = 1
     replicas: dict[str, int] = field(default_factory=dict)
     batch_sizes: tuple[int, ...] | None = None     # frontier sweep override
+    frontier_epsilon: float = 0.0                  # ε-dominance (0 == exact)
     # constraints
     must_use: tuple[str, ...] = ()
     exclude: tuple[str, ...] = ()
@@ -103,6 +107,19 @@ class Query:
     max_resource_time: dict[str, float] = field(default_factory=dict)
     min_blocks_on: dict[str, int] = field(default_factory=dict)
     pipelines: tuple[tuple[str, ...], ...] | None = None   # restrict pipelines
+
+    def __post_init__(self):
+        # normalize the sequence-valued fields once, so every strategy
+        # (enumeration cache, restricted enumeration, lattice) compares
+        # against the same shapes — a pipe supplied as a list used to
+        # enumerate its configs and then be filtered out one by one
+        self.must_use = tuple(self.must_use)
+        self.exclude = tuple(self.exclude)
+        if self.pipelines is not None:
+            self.pipelines = tuple(tuple(p) for p in self.pipelines)
+        if self.frontier_epsilon < 0.0:
+            raise ValueError(
+                f"frontier_epsilon must be >= 0, got {self.frontier_epsilon}")
 
     def constraints(self) -> Constraints:
         return Constraints(must_use=self.must_use, exclude=self.exclude,
@@ -116,6 +133,11 @@ class QueryResult:
     configs: list[PartitionConfig]
     query_time_s: float
     strategy: str
+    # ParetoLattice label-set statistics, populated by the lattice frontier
+    # strategy: how many vector labels survived per-state dominance pruning
+    # across all states, and how many were pruned
+    labels_kept: int = 0
+    labels_pruned: int = 0
 
     @property
     def best(self) -> PartitionConfig:
@@ -187,7 +209,7 @@ class QueryEngine:
         restricted-enumeration and lattice branches consistent."""
         order = {r.name: r.order for r in self.resources}
         return tuple(
-            p for p in pipes
+            tuple(p) for p in pipes
             if all(n in order for n in p)
             and all(order[a] < order[b] for a, b in zip(p, p[1:])))
 
@@ -221,40 +243,84 @@ class QueryEngine:
                            query_time_s=time.perf_counter() - t0,
                            strategy=strategy)
 
-    def frontier(self, query: Query | None = None) -> QueryResult:
+    def frontier(self, query: Query | None = None,
+                 strategy: str | None = None) -> QueryResult:
         """Pareto non-dominated set over (latency, throughput, transfer),
         swept across operating points (measured batch sizes × the query's
         replica budget).
 
-        Small spaces: exact within each operating point — computed from the
-        full (constraint-filtered) enumeration.  Large spaces: assembled
-        from k-best lattice solves under each base objective and
-        Pareto-filtered (a high-recall approximation; every returned config
-        is still non-dominated within the candidate pool).  Replica counts
-        of returned points are trimmed to the minimum achieving their
-        bottleneck.  Results are sorted by latency.
+        Both strategies are exact (chosen by search-space size, or forced
+        via ``strategy``):
+
+        * ``"exhaustive"`` — non-dominated filter over the full
+          (constraint-filtered) enumeration: the paper-faithful path on
+          small spaces and the validation oracle the lattice is checked
+          against (tests + ``bench_partitions --smoke-frontier``).
+        * ``"lattice"`` — :class:`ParetoLattice` per operating point: every
+          (block, resource, must-use-mask) state keeps its exact
+          non-dominated label set, replacing the three-objective k-best
+          union that could silently miss non-dominated operating points.
+          ``Query.frontier_epsilon`` > 0 trades a bounded relative error
+          for smaller label sets on fleet-sized spaces; label-set
+          statistics land on ``QueryResult.labels_kept`` /
+          ``labels_pruned``.  Path-dependent constraints
+          (``max_resource_time`` / ``min_blocks_on``) are post-filtered,
+          as in every lattice.
+
+        Points from every swept operating point compete in one final
+        Pareto filter, so the result is the exact global frontier over the
+        swept points.  Replica counts of returned points are trimmed to
+        the minimum achieving their bottleneck.  Results are sorted by
+        latency.
         """
         query = query or Query()
+        if strategy not in (None, "exhaustive", "lattice"):
+            raise ValueError(f"unknown frontier strategy {strategy!r}")
         t0 = time.perf_counter()
         cons = query.constraints()
-        exhaustive = self._search_space(query) <= EXHAUSTIVE_LIMIT
+        if strategy is None:
+            strategy = "exhaustive" \
+                if self._search_space(query) <= EXHAUSTIVE_LIMIT else "lattice"
+        kept = pruned = 0
         cands: list[PartitionConfig] = []
         for batch in self._frontier_batches(query):
             q = replace(query, batch_size=batch)
             cost = self._cost_for(q)
-            if exhaustive:
+            if strategy == "exhaustive":
                 cands.extend(self._filtered_exhaustive(q, cons, cost))
             else:
-                width = max(query.top_n, 16)
-                for obj in (LATENCY, TRANSFER, THROUGHPUT):
-                    qq = replace(q, objective=obj, top_n=width)
-                    cands.extend(self._run_lattice(qq, cons, cost))
+                configs, k, p = self._lattice_frontier(q, cons, cost)
+                cands.extend(configs)
+                kept += k
+                pruned += p
         front = [trim_replicas(c) for c in pareto_frontier(_dedupe(cands))]
         front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
                                   c.transfer_bytes))
         return QueryResult(configs=front,
                            query_time_s=time.perf_counter() - t0,
-                           strategy="exhaustive" if exhaustive else "lattice")
+                           strategy=strategy,
+                           labels_kept=kept, labels_pruned=pruned)
+
+    def _lattice_frontier(self, query: Query, cons: Constraints,
+                          cost: CostModel
+                          ) -> tuple[list[PartitionConfig], int, int]:
+        """One operating point's exact frontier via :class:`ParetoLattice`,
+        honoring a ``Query.pipelines`` restriction the same way
+        :meth:`_run_lattice` does (per-pipe solves; overlapping pipe
+        spaces are fine — the caller Pareto-filters the deduped union).
+        Returns (configs, labels_kept, labels_pruned)."""
+        eps = query.frontier_epsilon
+        if query.pipelines is None:
+            lattice = ParetoLattice(cost, cons, epsilon=eps)
+            return lattice.solve(), lattice.labels_kept, lattice.labels_pruned
+        merged: list[PartitionConfig] = []
+        kept = pruned = 0
+        for pcons in self._pipe_constraints(query):
+            lattice = ParetoLattice(cost, pcons, epsilon=eps)
+            merged.extend(lattice.solve())
+            kept += lattice.labels_kept
+            pruned += lattice.labels_pruned
+        return merged, kept, pruned
 
     def _lattice_for(self, cons: Constraints, objective: Objective,
                      cost: CostModel):
@@ -262,29 +328,34 @@ class QueryEngine:
             return BottleneckLattice(cost, cons)
         return PartitionLattice(cost, cons, objective)
 
-    def _run_lattice(self, query: Query, cons: Constraints,
-                     cost: CostModel) -> list[PartitionConfig]:
-        if query.pipelines is None:
-            return self._lattice_for(cons, query.objective, cost).solve(
-                top_n=query.top_n)
-        # Restrict the lattice to the requested pipelines: solving with
-        # must_use == the pipe and everything else excluded admits exactly
-        # that resource sequence (transitions only move to later tiers, so
-        # the order is forced), then merge the per-pipe k-best lists.
+    def _pipe_constraints(self, query: Query):
+        """Per-pipe lattice restrictions for a ``Query.pipelines`` query:
+        solving with must_use == the pipe and everything else excluded
+        admits exactly that resource sequence (transitions only move to
+        later tiers, so the order is forced).  Yields one Constraints per
+        admissible pipe — shared by the k-best and frontier lattice paths
+        so both honor identical restrictions."""
         all_names = {r.name for r in self.resources}
-        merged: list[PartitionConfig] = []
         for pipe in self._valid_pipelines(query.pipelines):
             members = set(pipe)
             if any(m not in members for m in query.must_use):
                 continue
             if members & set(query.exclude):
                 continue
-            pcons = Constraints(
+            yield Constraints(
                 must_use=pipe,
                 exclude=tuple(set(query.exclude) | (all_names - members)),
                 pin=query.pin, max_link_bytes=query.max_link_bytes,
                 max_resource_time=query.max_resource_time,
                 min_blocks_on=query.min_blocks_on)
+
+    def _run_lattice(self, query: Query, cons: Constraints,
+                     cost: CostModel) -> list[PartitionConfig]:
+        if query.pipelines is None:
+            return self._lattice_for(cons, query.objective, cost).solve(
+                top_n=query.top_n)
+        merged: list[PartitionConfig] = []
+        for pcons in self._pipe_constraints(query):
             merged.extend(self._lattice_for(pcons, query.objective, cost)
                           .solve(top_n=query.top_n))
         return rank(_dedupe(merged), query.objective, query.top_n)
@@ -313,10 +384,15 @@ class QueryEngine:
             if pool is None:
                 pool = _cache_put(self._exhaustive_cache, point,
                                   enumerate_partitions(cost))
+        # filter against the *normalized* pipeline set: the enumeration
+        # paths normalize through _valid_pipelines, so comparing raw query
+        # values (e.g. pipes supplied as lists) would reject every config
+        allowed_pipes = None if query.pipelines is None else \
+            set(self._valid_pipelines(query.pipelines))
         out = []
         for cfg in pool:
-            if query.pipelines is not None and \
-                    cfg.resources not in query.pipelines:
+            if allowed_pipes is not None and \
+                    cfg.resources not in allowed_pipes:
                 continue
             if not self._config_satisfies(cfg, cons, cost):
                 continue

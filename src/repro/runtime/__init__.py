@@ -2,12 +2,13 @@ from .sharding import (AxisRules, constrain, multi_pod_rules,
                        named_sharding, single_pod_rules, smoke_rules,
                        tree_shardings, use_rules)
 from .pipeline import PipelineExecutor, Stage, StageTiming
-from .elastic import ElasticController, PlanEvent
+from .elastic import ElasticController, PlanEvent, frontier_shift
 from .ft import (HeartbeatRegistry, ShardAssignment, StragglerDetector,
                  TrainSupervisor)
 
 __all__ = ["AxisRules", "constrain", "multi_pod_rules", "named_sharding",
            "single_pod_rules", "smoke_rules", "tree_shardings", "use_rules",
            "PipelineExecutor", "Stage", "StageTiming", "ElasticController",
-           "PlanEvent", "HeartbeatRegistry", "ShardAssignment",
+           "PlanEvent", "frontier_shift",
+           "HeartbeatRegistry", "ShardAssignment",
            "StragglerDetector", "TrainSupervisor"]

@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from repro.core.network import NetworkModel
-from repro.core.partition import PartitionConfig
+from repro.core.partition import PartitionConfig, objective_vector
 from repro.core.planner import Scission
 from repro.core.query import Query
 from repro.core.resources import Resource
@@ -32,6 +32,11 @@ class PlanEvent:
     wall_time: float
     plan_time_s: float
     config: PartitionConfig
+    # the whole trade-off surface at plan time (controller frontier mode):
+    # the Pareto non-dominated set over (latency, throughput, transfer),
+    # so operational changes can report how the surface moved, not just
+    # which single winner was picked
+    frontier: list[PartitionConfig] | None = None
 
     # both serving metrics are exposed per event so operators can audit the
     # latency/throughput trade-off across re-plans regardless of which
@@ -51,21 +56,45 @@ class PlanEvent:
         point."""
         return (self.config.batch_size, self.config.replicas)
 
+    @property
+    def frontier_size(self) -> int:
+        return len(self.frontier or ())
+
+
+def frontier_shift(before: list[PartitionConfig] | None,
+                   after: list[PartitionConfig] | None) -> dict:
+    """How the Pareto surface moved between two plans, as objective-vector
+    sets ``(latency_s, bottleneck_s, transfer_bytes)``: points ``added`` to
+    the frontier, ``removed`` from it, and ``kept`` unchanged.  Vectors are
+    exact-comparable across re-plans because every plan prices from the
+    same cached benchmark records — only membership changes."""
+    bv = {objective_vector(c) for c in (before or ())}
+    av = {objective_vector(c) for c in (after or ())}
+    return {"added": sorted(av - bv), "removed": sorted(bv - av),
+            "kept": sorted(av & bv)}
+
 
 class ElasticController:
     """Re-plans on membership/network changes, preserving the active
     operating point: every re-plan reuses the controller's query, so its
     batch size and replica budget (and with them the serving engine's
-    admission width) survive resource loss, join, and bandwidth shifts."""
+    admission width) survive resource loss, join, and bandwidth shifts.
+
+    With ``track_frontier=True`` every re-plan additionally extracts the
+    Pareto frontier over (latency, throughput, transfer) at the new
+    membership/network state and stores it on the :class:`PlanEvent`, so
+    an operational change reports how the whole trade-off surface moved
+    (:meth:`last_frontier_shift`), not just the single winner."""
 
     def __init__(self, scission: Scission, model: str,
                  input_bytes: float = 150e3, query: Query | None = None,
-                 graph=None):
+                 graph=None, track_frontier: bool = False):
         self.scission = scission
         self.model = model
         self.input_bytes = input_bytes
         self.query = query or Query(top_n=1)
         self.graph = graph            # for incremental benchmarking on join
+        self.track_frontier = track_frontier
         self.history: list[PlanEvent] = []
         self._replan("initial")
 
@@ -76,11 +105,24 @@ class ElasticController:
     def _replan(self, reason: str) -> PlanEvent:
         t0 = time.perf_counter()
         res = self.scission.query(self.model, self.query, self.input_bytes)
+        front = None
+        if self.track_frontier:
+            front = self.scission.frontier(self.model, self.query,
+                                           self.input_bytes).configs
+        # plan_time_s covers the full re-plan, frontier extraction included
         ev = PlanEvent(reason=reason, wall_time=time.time(),
                        plan_time_s=time.perf_counter() - t0,
-                       config=res.best)
+                       config=res.best, frontier=front)
         self.history.append(ev)
         return ev
+
+    def last_frontier_shift(self) -> dict | None:
+        """Frontier movement between the two most recent frontier-carrying
+        plans (None until two such plans exist — requires frontier mode)."""
+        evs = [e for e in self.history if e.frontier is not None]
+        if len(evs) < 2:
+            return None
+        return frontier_shift(evs[-2].frontier, evs[-1].frontier)
 
     # -- operational changes --------------------------------------------------
     def on_resource_lost(self, name: str) -> PlanEvent:

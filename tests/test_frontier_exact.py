@@ -1,0 +1,431 @@
+"""Exact Pareto-frontier lattice (ParetoLattice) vs the exhaustive oracle,
+plus the lattice/query/network regression fixes that shipped with it.
+
+The hypothesis property fabricates benchmark DBs with *dyadic* times and
+power-of-two bandwidths so every cost-model sum/max/division is exact in
+float64 — vector-set comparisons between strategies can then use exact
+equality, which is the acceptance bar: on every space where the exhaustive
+oracle is tractable, the lattice frontier's objective-vector set equals the
+exhaustive ``pareto_frontier``'s, with ε = 0, across batch sizes × replica
+budgets and under must_use / exclude / pin / max_link_bytes constraints.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (BenchmarkDB, Constraints, CostModel, LATENCY, Link,
+                        NetworkModel, ParetoLattice, Query, QueryEngine,
+                        Resource, THROUGHPUT, dominates,
+                        enumerate_partitions, objective_vector,
+                        pareto_frontier, rank)
+from repro.core.bench import BlockBenchmark
+from repro.core.network import LOOPBACK
+from repro.core.partition import BottleneckLattice, _nondominated_rows
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+import repro.core.query as query_mod
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # degrade to the deterministic tests only
+    HAVE_HYPOTHESIS = False
+
+DEVICE_MODELS = {"device": RPI4, "edge": EDGE_BOX_1, "cloud": CLOUD_VM}
+
+
+_vec = objective_vector
+
+
+def _make_db(model, n_blocks, resources, times, out_bytes, batches=(1,)):
+    """Fabricate a BenchmarkDB directly (no jax tracing): ``times`` maps
+    (resource, block, batch) -> seconds, ``out_bytes`` maps block -> bytes
+    at batch 1 (scaled linearly for larger batches, like the real
+    harness)."""
+    db = BenchmarkDB(model=model, n_blocks=n_blocks)
+    for r in resources:
+        recs = []
+        for b in range(n_blocks):
+            profile = {bt: (times[(r.name, b, bt)], out_bytes[b] * bt)
+                       for bt in batches}
+            recs.append(BlockBenchmark(
+                block=b, resource=r.name, mean_time_s=profile[1][0],
+                std_time_s=0.0, output_bytes=out_bytes[b], runs=1,
+                batch_profile=profile))
+        db.records[r.name] = recs
+    return db
+
+
+def _grid_space(n_blocks=5, n_edge=2, n_cloud=1, batches=(1,)):
+    """A small deterministic space with real trade-offs: dyadic times that
+    differ per tier, a default link plus a couple of explicit ones."""
+    res = [Resource("device0", "device", RPI4)]
+    res += [Resource(f"edge{i}", "edge", EDGE_BOX_1) for i in range(n_edge)]
+    res += [Resource(f"cloud{i}", "cloud", CLOUD_VM) for i in range(n_cloud)]
+    times = {}
+    for ri, r in enumerate(res):
+        for b in range(n_blocks):
+            for bt in batches:
+                times[(r.name, b, bt)] = \
+                    ((b + 2) * (ri + 1) % 7 + 1) * bt / (1 << 6)
+    out_bytes = [((3 * b + 1) % 5 + 1) * (1 << 12) for b in range(n_blocks)]
+    db = _make_db("grid", n_blocks, res, times, out_bytes, batches)
+    net = NetworkModel(default=Link("d", 1 / (1 << 6), float(1 << 20)))
+    net.connect("device0", "edge0", Link("a", 1 / (1 << 8), float(1 << 22)))
+    net.connect("edge0", "cloud0", Link("b", 1 / (1 << 7), float(1 << 24)))
+    eng = QueryEngine(db, res, net, source="device0", input_bytes=float(1 << 14))
+    return eng
+
+
+class TestParetoLatticeExact:
+    """Lattice frontier == exhaustive frontier (vector-set equality)."""
+
+    def test_unconstrained_matches_oracle(self):
+        eng = _grid_space()
+        cost = eng.cost
+        got = {_vec(c) for c in ParetoLattice(cost).solve()}
+        want = {_vec(c) for c in pareto_frontier(enumerate_partitions(cost))}
+        assert got == want
+        assert len(want) >= 2    # the space has a real trade-off surface
+
+    @pytest.mark.parametrize("cons", [
+        Constraints(must_use=("device0", "edge0", "cloud0")),
+        Constraints(must_use=("edge1",)),
+        Constraints(exclude=("edge0",)),
+        Constraints(pin={2: "edge1"}),
+        Constraints(max_link_bytes={("device0", "edge0"): float(1 << 13),
+                                    ("device0", "cloud0"): float(1 << 13)}),
+    ])
+    def test_constrained_matches_oracle(self, cons):
+        eng = _grid_space()
+        cost = eng.cost
+        got = {_vec(c) for c in ParetoLattice(cost, cons).solve()}
+        want = {_vec(c) for c in pareto_frontier(
+            [c for c in enumerate_partitions(cost)
+             if eng._config_satisfies(c, cons, cost)])}
+        assert got == want
+
+    def test_engine_strategies_agree_across_operating_points(self):
+        eng = _grid_space(batches=(1, 2))
+        q = Query(replicas={"device0": 2, "edge0": 2})
+        exh = eng.frontier(q, strategy="exhaustive")
+        lat = eng.frontier(q, strategy="lattice")
+        assert exh.strategy == "exhaustive" and lat.strategy == "lattice"
+        assert {_vec(c) for c in lat.configs} == {_vec(c) for c in exh.configs}
+        # the mix of batches on the frontier is preserved too
+        assert {(c.batch_size, _vec(c)) for c in lat.configs} == \
+            {(c.batch_size, _vec(c)) for c in exh.configs}
+        # statistics surface only on the lattice strategy
+        assert lat.labels_kept > 0
+        assert exh.labels_kept == 0 and exh.labels_pruned == 0
+
+    def test_engine_strategies_agree_on_overlapping_pipelines(self):
+        eng = _grid_space()
+        pipes = (("device0", "edge0"), ("device0", "edge0", "cloud0"),
+                 ("device0", "cloud0"), ("edge0", "cloud0"))
+        q = Query(pipelines=pipes)
+        exh = eng.frontier(q, strategy="exhaustive")
+        lat = eng.frontier(q, strategy="lattice")
+        assert exh.configs, "restricted space must not be empty"
+        assert {_vec(c) for c in lat.configs} == {_vec(c) for c in exh.configs}
+
+    def test_unknown_strategy_rejected(self):
+        eng = _grid_space()
+        with pytest.raises(ValueError, match="strategy"):
+            eng.frontier(Query(), strategy="bogus")
+
+    def test_negative_epsilon_rejected(self):
+        with pytest.raises(ValueError, match="frontier_epsilon"):
+            Query(frontier_epsilon=-0.1)
+        with pytest.raises(ValueError, match="epsilon"):
+            ParetoLattice(_grid_space().cost, epsilon=-1e-3)
+
+    def test_epsilon_bounds_labels_and_error(self):
+        eng = _grid_space(n_blocks=6, n_edge=2, n_cloud=2)
+        cost = eng.cost
+        exact = ParetoLattice(cost)
+        exact_front = exact.solve()
+        eps = 0.25
+        approx = ParetoLattice(cost, epsilon=eps)
+        approx_front = approx.solve()
+        assert approx.labels_kept <= exact.labels_kept
+        assert 0 < len(approx_front) <= len(exact_front)
+        # coverage: every exact-front point has an approximate point within
+        # the compounded multiplicative bound in every objective
+        bound = (1.0 + eps) ** cost.n_blocks
+        for q in (_vec(c) for c in exact_front):
+            assert any(all(p[i] <= bound * q[i] + 1e-12 for i in range(3))
+                       for p in (_vec(c) for c in approx_front))
+        # every approximate point is a genuine configuration of the space
+        space = {_vec(c) for c in enumerate_partitions(cost)}
+        assert {_vec(c) for c in approx_front} <= space
+
+    def test_nondominated_rows_basic(self):
+        pts = np.array([[1.0, 2.0], [2.0, 1.0], [2.0, 2.0], [1.0, 2.0],
+                        [0.5, 3.0]])
+        keep = _nondominated_rows(pts)
+        # duplicates collapse to one representative; [2,2] is dominated
+        assert [tuple(p) for p in pts[keep]] == \
+            [(1.0, 2.0), (2.0, 1.0), (0.5, 3.0)]
+        # ε-pruning keeps one representative of ε-close rows
+        keep_eps = _nondominated_rows(np.array([[1.0, 1.0], [1.05, 1.05]]),
+                                      eps=0.1)
+        assert len(keep_eps) == 1
+
+
+class TestSatelliteFixes:
+    def test_pipelines_as_lists_not_silently_empty(self):
+        """Regression: a pipe supplied as a list enumerated configs and then
+        filtered every one of them out (raw-vs-normalized comparison)."""
+        eng = _grid_space()
+        want = eng.run(Query(top_n=3, pipelines=(("device0", "cloud0"),)))
+        got = eng.run(Query(top_n=3, pipelines=[["device0", "cloud0"]]))
+        assert got.configs, "list-shaped pipelines must not return []"
+        assert [c.segments for c in got.configs] == \
+            [c.segments for c in want.configs]
+        # frontier path, both strategies
+        for strategy in ("exhaustive", "lattice"):
+            f_want = eng.frontier(Query(pipelines=(("device0", "cloud0"),)),
+                                  strategy=strategy)
+            f_got = eng.frontier(Query(pipelines=[["device0", "cloud0"]]),
+                                 strategy=strategy)
+            assert f_got.configs
+            assert {_vec(c) for c in f_got.configs} == \
+                {_vec(c) for c in f_want.configs}
+
+    def test_pipelines_as_lists_on_lattice_run(self, monkeypatch):
+        eng = _grid_space()
+        want = eng.run(Query(top_n=3, pipelines=(("device0", "cloud0"),)))
+        monkeypatch.setattr(query_mod, "EXHAUSTIVE_LIMIT", -1)
+        lat_eng = _grid_space()
+        got = lat_eng.run(Query(top_n=3, pipelines=[["device0", "cloud0"]]))
+        assert got.strategy == "lattice" and got.configs
+        # ties are common in the grid space, so compare objective values
+        assert [c.latency_s for c in got.configs] == \
+            [c.latency_s for c in want.configs]
+        for c in got.configs:
+            assert c.resources == ("device0", "cloud0")
+
+    def test_bottleneck_tie_break_returns_min_latency(self):
+        """Regression: reconstruction used to stop at ``top_n * 2`` configs
+        *before* the (bottleneck, latency) tie-break sort, so when many
+        paths tie on the bottleneck (input hop dominates) a lower-latency
+        config could be cut and a strictly worse one returned."""
+        res = [Resource("device0", "device", RPI4)]
+        res += [Resource(f"edge{i}", "edge", EDGE_BOX_1) for i in range(4)]
+        res += [Resource("cloud0", "cloud", CLOUD_VM)]
+        n_blocks = 3
+        times = {}
+        for ri, r in enumerate(res):
+            for b in range(n_blocks):
+                # device so slow that no device-using config can tie; edges
+                # get slower with their index; the cloud is fastest — so
+                # the tied configs span a wide range of latencies and the
+                # lowest-latency one (all-cloud) sorts *last* among the
+                # finals' insertion order
+                t = 6.0 if ri == 0 else float(8 - ri) / (1 << 6)
+                times[(r.name, b, 1)] = t
+        out_bytes = [1 << 8] * n_blocks
+        db = _make_db("ties", n_blocks, res, times, out_bytes)
+        # a slow access link + a large input make the input hop the shared
+        # bottleneck of every off-device config
+        net = NetworkModel(default=Link("slow", 1.0, float(1 << 16)))
+        cost = CostModel(db=db, resources=res, network=net, source="device0",
+                         input_bytes=float(1 << 18))
+        configs = enumerate_partitions(cost)
+        # the scenario is only meaningful if many configs tie on bottleneck
+        best_b = min(c.bottleneck_s for c in configs)
+        tied = [c for c in configs if c.bottleneck_s == best_b]
+        assert len(tied) > 2, "scenario must produce > top_n*2 ties"
+        oracle = min(tied, key=lambda c: c.latency_s)
+        got = BottleneckLattice(cost).solve(top_n=1)[0]
+        assert got.bottleneck_s == pytest.approx(best_b)
+        assert got.latency_s == pytest.approx(oracle.latency_s)
+        assert got.resources == ("cloud0",)
+
+    @pytest.mark.parametrize("q", [
+        Query(must_use=("nosuch",)),                       # unknown name
+        Query(must_use=("edge0",), exclude=("edge0",)),    # self-excluded
+    ])
+    def test_unsatisfiable_must_use_consistent_across_strategies(self, q):
+        """Regression: the lattices silently dropped must_use entries that
+        were unknown or excluded, returning the *unconstrained* results
+        where the exhaustive strategy correctly returns [] — on fleet-sized
+        spaces (lattice default) a typoed must_use yielded a frontier that
+        ignored the constraint."""
+        eng = _grid_space()
+        assert eng.run(q).configs == []
+        for strategy in ("exhaustive", "lattice"):
+            assert eng.frontier(q, strategy=strategy).configs == []
+        cost, cons = eng.cost, q.constraints()
+        from repro.core import BottleneckLattice, PartitionLattice
+        assert ParetoLattice(cost, cons).solve() == []
+        assert PartitionLattice(cost, cons).solve(top_n=3) == []
+        assert BottleneckLattice(cost, cons).solve(top_n=3) == []
+
+    def test_network_explicit_self_link_honored(self):
+        staging = Link("staging", 1e-3, 1e9)
+        net = NetworkModel().connect("host", "host", staging)
+        assert net.link("host", "host") is staging
+        assert net.comm_time("host", "host", 1e6) == \
+            pytest.approx(1e-3 + 1e6 / 1e9)
+        # implicit self-links stay free
+        assert net.link("other", "other") is LOOPBACK
+        assert net.comm_time("other", "other", 1e9) == 0.0
+
+
+class TestElasticFrontierMode:
+    def _scission(self, link):
+        from repro.core import Scission, AnalyticProvider, linear_graph
+        from repro.core.graph import LayerNode
+        import jax, jax.numpy as jnp
+        layers = [LayerNode(f"l{i}", "dense",
+                            apply=lambda x: x * 1.0,
+                            flops=float((i + 1) * 5e7)) for i in range(5)]
+        g = linear_graph("toy-el", jax.ShapeDtypeStruct((1, 8), jnp.float32),
+                         layers)
+        res = [Resource("device", "device", RPI4, speed_factor=30.0),
+               Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0),
+               Resource("cloud", "cloud", CLOUD_VM, speed_factor=1.0)]
+        net = NetworkModel(default=link)
+        s = Scission(resources=res, network=net, source="device",
+                     provider=AnalyticProvider(), runs=1)
+        s.benchmark(g)
+        return s
+
+    def test_track_frontier_reports_surface_movement(self):
+        from repro.runtime.elastic import ElasticController, frontier_shift
+        s = self._scission(Link("l", 0.01, 1e6))
+        ctl = ElasticController(s, "toy-el", query=Query(top_n=1),
+                                track_frontier=True)
+        ev0 = ctl.history[0]
+        assert ev0.frontier is not None and ev0.frontier_size >= 1
+        assert ctl.last_frontier_shift() is None   # only one plan so far
+        ev1 = ctl.on_network_change(NetworkModel(default=Link("f", 0.0, 1e12)))
+        assert ev1.frontier is not None
+        shift = ctl.last_frontier_shift()
+        assert shift is not None
+        assert shift["added"] or shift["removed"] or shift["kept"]
+        # a near-free network shrinks the surface toward the all-cloud point
+        assert shift == frontier_shift(ev0.frontier, ev1.frontier)
+        assert set(shift) == {"added", "removed", "kept"}
+
+    def test_frontier_mode_off_by_default(self):
+        from repro.runtime.elastic import ElasticController
+        s = self._scission(Link("l", 0.01, 1e6))
+        ctl = ElasticController(s, "toy-el")
+        assert ctl.history[0].frontier is None
+        assert ctl.history[0].frontier_size == 0
+        assert ctl.last_frontier_shift() is None
+
+
+# ---------------------------------------------------------------------------
+# randomized property: small spaces, exact vector-set equality.  One
+# seed-driven generator serves both a deterministic parametrized sweep
+# (always runs, executable in hypothesis-less containers) and a hypothesis
+# amplifier that explores many more seeds when the package is available.
+# ---------------------------------------------------------------------------
+
+def _random_engine_and_query(seed):
+    """A random small space with dyadic times and power-of-two bandwidths
+    (so every cost-model sum/max/division is exact in float64), plus a
+    random DP-exact constraint / replica budget / batch sweep."""
+    rng = np.random.default_rng(seed)
+    n_blocks = int(rng.integers(3, 7))
+    batches = (1,) if rng.integers(2) else (1, 2)
+    res = [Resource("device0", "device", RPI4)]
+    res += [Resource(f"edge{i}", "edge", EDGE_BOX_1)
+            for i in range(int(rng.integers(0, 3)))]
+    res += [Resource(f"cloud{i}", "cloud", CLOUD_VM)
+            for i in range(int(rng.integers(1, 3)))]
+    names = [r.name for r in res]
+    times = {}
+    for r in names:
+        for b in range(n_blocks):
+            t1 = int(rng.integers(1, 1 << 10)) / (1 << 10)
+            times[(r, b, 1)] = t1
+            if 2 in batches:
+                times[(r, b, 2)] = t1 + int(rng.integers(0, 1 << 10)) / (1 << 10)
+    out_bytes = [int(rng.integers(1, 1 << 14)) for _ in range(n_blocks)]
+    db = _make_db("rand", n_blocks, res, times, out_bytes, batches)
+
+    def link(tag):
+        return Link(tag, int(rng.integers(0, 1 << 6)) / (1 << 10),
+                    float(1 << int(rng.integers(14, 23))))
+
+    net = NetworkModel(default=link("d"))
+    for a, b in itertools.permutations(names, 2):
+        if rng.random() < 0.4:
+            net.connect(a, b, link(f"{a}-{b}"), symmetric=False)
+    eng = QueryEngine(db, res, net, source="device0",
+                      input_bytes=float(rng.integers(1, 1 << 16)))
+    # constraints: the DP-exact kinds from the acceptance criteria
+    kind = ["none", "must_use", "exclude", "pin", "max_link"][
+        int(rng.integers(5))]
+    kw = {}
+    if kind == "must_use":
+        k = int(rng.integers(1, min(3, len(names)) + 1))
+        kw["must_use"] = tuple(rng.choice(names, size=k, replace=False))
+    elif kind == "exclude" and len(names) > 1:
+        kw["exclude"] = (str(rng.choice(names[1:])),)
+    elif kind == "pin":
+        kw["pin"] = {int(rng.integers(n_blocks)): str(rng.choice(names))}
+    elif kind == "max_link":
+        a, b = rng.choice(names, size=2, replace=False)
+        kw["max_link_bytes"] = {(str(a), str(b)):
+                                float(rng.integers(1, 1 << 15))}
+    if rng.integers(2):
+        kw["replicas"] = {str(rng.choice(names)): 2}
+    return eng, Query(batch_sizes=batches, **kw)
+
+
+def _assert_lattice_equals_exhaustive(seed):
+    """Acceptance property: on randomized small spaces (with and without
+    constraints and replica budgets, across measured batch sizes) the
+    lattice frontier's objective-vector set equals the exhaustive Pareto
+    set exactly at ε = 0."""
+    eng, query = _random_engine_and_query(seed)
+    exh = eng.frontier(query, strategy="exhaustive")
+    lat = eng.frontier(query, strategy="lattice")
+    assert {_vec(c) for c in lat.configs} == {_vec(c) for c in exh.configs}
+    # soundness of the oracle itself: nothing returned is dominated
+    for c in exh.configs:
+        assert not any(dominates(o, c) for o in exh.configs)
+
+
+def _assert_epsilon_covers_exact(seed, eps=0.2):
+    """With ε > 0 every exact-front point is within the compounded
+    (1+ε)^B multiplicative bound of some returned point."""
+    import dataclasses
+    eng, query = _random_engine_and_query(seed)
+    exact = eng.frontier(query, strategy="lattice")
+    approx = eng.frontier(dataclasses.replace(query, frontier_epsilon=eps),
+                          strategy="lattice")
+    assert approx.labels_kept <= exact.labels_kept
+    bound = (1.0 + eps) ** eng.db.n_blocks
+    for q in (_vec(c) for c in exact.configs):
+        assert any(all(p[i] <= bound * q[i] + 1e-12 for i in range(3))
+                   for p in (_vec(c) for c in approx.configs))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_lattice_frontier_equals_exhaustive_frontier(seed):
+    _assert_lattice_equals_exhaustive(seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_epsilon_frontier_covers_exact_front(seed):
+    _assert_epsilon_covers_exact(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10 ** 9))
+    @settings(max_examples=30, deadline=None)
+    def test_lattice_frontier_property(seed):
+        _assert_lattice_equals_exhaustive(seed)
+
+    @given(st.integers(0, 10 ** 9))
+    @settings(max_examples=10, deadline=None)
+    def test_epsilon_frontier_property(seed):
+        _assert_epsilon_covers_exact(seed)
