@@ -18,8 +18,10 @@ Run standalone in smoke mode for CI::
 
     # frontier exactness + scaling: fails unless the ParetoLattice frontier
     # equals the exhaustive frontier (vector-set equality) on the paper
-    # networks x operating points, and the fleet-sized frontier query
-    # stays interactive (label statistics land in the JSON artifact):
+    # networks x operating points — including under binding path-dependent
+    # constraints (max_resource_time / min_blocks_on, folded into the DP
+    # state) — and the fleet-sized frontier query stays interactive (label
+    # statistics land in the JSON artifact):
     PYTHONPATH=src python -m benchmarks.bench_partitions --smoke-frontier \
         --out results/bench_partitions_smoke_frontier.json
 """
@@ -256,6 +258,60 @@ def scenario_frontier_exact(quick=True, models=None, batch_sizes=(1, 4),
 
 scenario_frontier_exact.failures = []
 
+
+def scenario_frontier_constrained(quick=True, models=None):
+    """Binding path-dependent constraints (max_resource_time /
+    min_blocks_on) folded into the lattice DP state: every lattice
+    strategy must return exactly the exhaustive oracle's result set — no
+    under-filled or empty results while a feasible config exists.  The
+    caps are derived per (network, model) from the unconstrained winner
+    (half its heaviest per-resource compute time), so the 'tmax' scenarios
+    are binding by construction: the unconstrained winner itself is
+    infeasible under them."""
+    print("\n# Constraint exactness — binding path-dependent constraints")
+    scenario_frontier_constrained.failures = []
+    rows = []
+    models = models or ["MobileNetV2"]
+    for net in ("3g", "4g", "wired"):
+        s = scenario_network._cache.setdefault(net, scission_for(net))
+        for m in models:
+            benchmark_cached(s, m)
+            n_blocks = s._dbs[m].n_blocks
+            base = s.query(m, Query(top_n=1)).best
+            res_heavy, t_heavy = max(base.compute_s.items(),
+                                     key=lambda kv: kv[1])
+            floor = {"device": max(2, n_blocks // 3)}
+            queries = {
+                "tmax": Query(max_resource_time={res_heavy: t_heavy / 2}),
+                "nmin": Query(min_blocks_on=floor),
+                "both": Query(max_resource_time={res_heavy: t_heavy / 2},
+                              min_blocks_on=floor),
+            }
+            for qname, q in queries.items():
+                exh = s.frontier(m, q, strategy="exhaustive")
+                lat = s.frontier(m, q, strategy="lattice")
+                equal = _frontiers_match(exh.configs, lat.configs)
+                underfill = bool(exh.configs) and not lat.configs
+                ok = "PASS" if equal and not underfill else "FAIL"
+                if ok == "FAIL":
+                    scenario_frontier_constrained.failures.append(
+                        f"{net}/{m}/{qname}")
+                print(f"  [{net}] {m}/{qname}: front={len(exh.configs)} "
+                      f"exh={exh.query_time_s * 1e3:.1f}ms "
+                      f"lat={lat.query_time_s * 1e3:.1f}ms "
+                      f"labels={lat.labels_kept}+{lat.labels_pruned} {ok}")
+                rows.append((f"front_cons/{net}/{m}/{qname}",
+                             lat.query_time_s * 1e6, len(lat.configs)))
+                rows.append((f"front_cons_oracle/{net}/{m}/{qname}",
+                             exh.query_time_s * 1e6, len(exh.configs)))
+                rows.append((f"front_cons_labels/{net}/{m}/{qname}",
+                             float(lat.labels_kept),
+                             int(lat.labels_pruned)))
+    return rows
+
+
+scenario_frontier_constrained.failures = []
+
 # fleet-sized frontier queries must stay interactive; the measured path is
 # ~0.5 s on a 27-resource / 32-block fleet (~350k-config space), so 5 s is
 # a generous regression tripwire rather than a tight bound
@@ -367,6 +423,7 @@ def run(quick: bool = True):
     rows += scenario_frontier(quick)
     rows += scenario_batched(quick)
     rows += scenario_frontier_exact(quick)
+    rows += scenario_frontier_constrained(quick)
     rows += scenario_frontier_scale(quick)
     return rows
 
@@ -382,11 +439,16 @@ def smoke_batched():
 def smoke_frontier():
     """CI pass for frontier exactness + scaling: gates on lattice-vs-
     exhaustive frontier vector-set equality (paper-network spaces across
-    3G/4G/wired and operating points) and on the fleet-sized frontier
-    staying interactive, with label statistics in the JSON artifact."""
+    3G/4G/wired and operating points), on constraint exactness under
+    binding path-dependent constraints (max_resource_time /
+    min_blocks_on — no under-filled or empty lattice results while a
+    feasible config exists), and on the fleet-sized frontier staying
+    interactive, with label statistics in the JSON artifact."""
     rows = scenario_frontier_exact(quick=True, models=["MobileNetV2"],
                                    batch_sizes=(1, 4),
                                    replicas={"device": 2, "edge1": 2})
+    rows += scenario_frontier_constrained(quick=True,
+                                          models=["MobileNetV2"])
     rows += scenario_frontier_scale(quick=True)
     return rows
 
@@ -439,6 +501,7 @@ def main() -> None:
         print(f"wrote {args.out}")
     failures = (scenario_throughput.failures + scenario_batched.failures
                 + scenario_frontier_exact.failures
+                + scenario_frontier_constrained.failures
                 + scenario_frontier_scale.failures)
     if failures:
         print(f"FAILED validation (throughput / frontier exactness / "

@@ -27,6 +27,12 @@ Two engines over the same cost model:
   surface from three single-objective k-best solves on fleet-sized
   spaces.  An optional ε-dominance knob bounds label-set growth.
 
+Every Step-6 constraint kind — including the path-dependent
+``max_resource_time`` / ``min_blocks_on`` — is folded into each lattice's
+DP state (see :class:`Constraints` / :class:`_LatticeBase`), so all three
+solvers return the true constrained optimum / frontier with no
+post-filtering.
+
 Cost model (paper's two assumptions, validated in tests/test_bench.py):
 
     latency(config) = comm(source -> r_1, input_bytes)
@@ -440,10 +446,30 @@ def pareto_frontier(configs: Sequence[PartitionConfig]
 # ---------------------------------------------------------------------------
 
 class Constraints:
-    """Hard constraints folded into the lattice (Scission Step 6).
+    """Hard constraints on the partitioning search (Scission Step 6).
 
-    All are exact in the DP except ``max_resource_time`` which is
-    path-dependent and enforced by post-filtering k-best paths.
+    **All constraints are exact in every strategy** — the exhaustive
+    enumeration filters whole configs, and the lattices fold each kind
+    into the DP itself:
+
+    * ``must_use`` — via the used-resource bit mask on the state.
+    * ``exclude`` / ``pin`` — via :meth:`allowed` on states.
+    * ``max_link_bytes`` — via :meth:`transition_allowed` on hand-offs.
+    * ``max_resource_time`` — cap on a resource's total compute time.
+      Strict tier ordering means a path visits each resource at most once,
+      as one contiguous segment, so the "path-dependent" accumulated time
+      is just the open segment's span: the lattices carry the open
+      segment's start block in the state key for capped resources and
+      prune any extension whose segment time exceeds the cap in-flight.
+    * ``min_blocks_on`` — floor on the number of blocks a resource hosts
+      (a floor >= 1 also forces the resource to appear, so it joins the
+      must-use mask); enforced exactly when the segment closes.
+
+    The two path-dependent kinds used to be enforced by post-filtering
+    k-best pools, so a binding constraint could reject every pooled winner
+    and return fewer — or zero — results while a feasible optimum existed.
+    :meth:`path_feasible` remains as the whole-config reference check used
+    by the exhaustive strategy (and as the validation oracle in tests).
     """
 
     def __init__(self,
@@ -471,6 +497,9 @@ class Constraints:
         return limit is None or nbytes <= limit
 
     def path_feasible(self, cfg: PartitionConfig) -> bool:
+        """Whole-config check of the path-dependent constraints — used by
+        the exhaustive strategy's filter and as the lattices' validation
+        oracle (the lattices themselves enforce these in the DP state)."""
         for res, tmax in self.max_resource_time.items():
             if cfg.compute_s.get(res, 0.0) > tmax:
                 return False
@@ -484,13 +513,30 @@ class Constraints:
 
 class _LatticeBase:
     """State shared by every lattice DP: the exclude-filtered resource
-    list, tier ordering, and the must-use bit mask.
+    list, tier ordering, the must-use bit mask, and the in-DP form of the
+    path-dependent constraints.
 
-    A ``must_use`` entry naming a resource that is unknown or excluded is
+    A ``must_use`` entry (or a ``min_blocks_on`` floor >= 1, which demands
+    presence) naming a resource that is unknown or excluded is
     **unsatisfiable**: no path can ever visit it, so ``infeasible`` is set
     and every ``solve`` returns ``[]`` — exactly what the exhaustive
     strategy does (it rejects every config), keeping the strategies
     consistent instead of silently dropping the constraint.
+
+    Path-dependent constraints are exact in the DP because transitions
+    only move to strictly later tiers: a path visits each resource at most
+    once, as one contiguous segment, so a resource's total compute time
+    and block count are properties of that single segment.  A lattice that
+    works at block granularity carries the open segment's start block in
+    its state key — but only for **tracked** resources (those named by
+    ``max_resource_time`` / ``min_blocks_on``), so the state space is
+    unchanged when the constraints are absent.  ``_seg_ok`` prunes a
+    segment that exceeds its compute-time cap the moment it does (the cap
+    is monotone in the segment span), and ``_close_ok`` enforces the
+    min-block floor when the segment closes.  Both recompute the segment
+    time via ``CostModel.segment_time``, the same prefix-sum arithmetic
+    ``evaluate`` uses, so the DP and the exhaustive oracle agree bit for
+    bit on feasibility.
     """
 
     def __init__(self, cost: CostModel,
@@ -501,11 +547,18 @@ class _LatticeBase:
                     if r.name not in self.cons.exclude]
         self.names = [r.name for r in self.res]
         self.order = {r.name: r.order for r in self.res}
-        self.must = [n for n in self.cons.must_use if n in self.names]
+        self.tmax = dict(self.cons.max_resource_time)
+        # a floor <= 0 is trivially satisfied (path_feasible accepts even
+        # an absent resource); a floor >= 1 demands presence
+        self.nmin = {n: k for n, k in self.cons.min_blocks_on.items()
+                     if k >= 1}
+        demanded = list(dict.fromkeys((*self.cons.must_use, *self.nmin)))
+        self.must = [n for n in demanded if n in self.names]
         self.must_idx = {n: i for i, n in enumerate(self.must)}
         self.full_mask = (1 << len(self.must)) - 1
-        self.infeasible = any(n not in self.names
-                              for n in self.cons.must_use)
+        self.infeasible = (
+            any(n not in self.names for n in demanded)
+            or any(k > cost.n_blocks for k in self.nmin.values()))
 
     def _bit(self, resource: str) -> int:
         i = self.must_idx.get(resource)
@@ -514,6 +567,24 @@ class _LatticeBase:
     def _mask_with(self, mask: int, resource: str) -> int:
         return mask | self._bit(resource)
 
+    def _tracked(self, resource: str) -> bool:
+        """True when the open segment's start block must live in the state
+        key for ``resource`` (it is compute-time capped or block-floored)."""
+        return resource in self.tmax or resource in self.nmin
+
+    def _seg_ok(self, resource: str, start: int, end: int) -> bool:
+        """Segment ``start..end`` on ``resource`` within its compute-time
+        cap (trivially true for uncapped resources)."""
+        t = self.tmax.get(resource)
+        return t is None or \
+            self.cost.segment_time(resource, start, end) <= t
+
+    def _close_ok(self, resource: str, start: int, end: int) -> bool:
+        """Closing segment ``start..end`` on ``resource`` satisfies its
+        min-block floor (the time cap was enforced while it grew)."""
+        k = self.nmin.get(resource)
+        return k is None or end - start + 1 >= k
+
 
 class PartitionLattice(_LatticeBase):
     """Viterbi over (block, resource, used-mask) with k-best extraction.
@@ -521,7 +592,12 @@ class PartitionLattice(_LatticeBase):
     Transitions: stay on the same resource (free) or hand off to a strictly
     later tier (pay ``comm(out_bytes[block])``).  The used-mask tracks which
     must-use resources have been visited so 'entire pipeline' style
-    constraints stay exact.
+    constraints stay exact, and for resources named by the path-dependent
+    constraints the state key additionally carries the open segment's start
+    block (see ``_LatticeBase``), so ``max_resource_time`` prunes in-flight
+    and ``min_blocks_on`` gates segment closes — every constraint is part
+    of the DP state and ``solve`` returns the true constrained k-best, with
+    no post-filtering.
     """
 
     def __init__(self, cost: CostModel, constraints: Constraints | None = None,
@@ -555,21 +631,28 @@ class PartitionLattice(_LatticeBase):
 
     def solve(self, top_n: int = 1) -> list[PartitionConfig]:
         """k-best paths through the lattice; returns up to ``top_n`` feasible
-        configs ranked by the objective."""
+        configs ranked by the objective.
+
+        Every constraint lives in the DP state, so this is the exact
+        constrained k-best: labels at the same (resource, mask, open-seg
+        start) state are interchangeable prefixes for every feasible
+        completion, hence ``K == top_n`` per state suffices and distinct
+        entries reconstruct distinct configs (a path determines its state).
+        """
         if top_n <= 0 or self.infeasible:
             return []
         B = self.cost.n_blocks
-        K = max(top_n * 4, top_n + 4)   # head-room for path-feasibility filter
-        # state -> list of (score, path) ; path = tuple of resource per block
-        # We keep paths as parent pointers to bound memory: entry =
-        # (score, resource, mask, parent_entry)
+        K = top_n
+        # state (resource, mask, open-seg start | -1 if untracked) -> k-best
+        # entries; paths kept as parent pointers to bound memory: entry =
+        # (score, tie, resource, mask, parent_entry)
         Entry = tuple  # (score, tie, resource, mask, parent)
-        frontier: dict[tuple[str, int], list[Entry]] = {}
+        frontier: dict[tuple[str, int, int], list[Entry]] = {}
         tie = itertools.count()
         push = self._push
 
         for r in self.names:
-            if not self.cons.allowed(0, r):
+            if not self.cons.allowed(0, r) or not self._seg_ok(r, 0, 0):
                 continue
             inp = 0.0
             if r != self.cost.source:
@@ -579,34 +662,46 @@ class PartitionLattice(_LatticeBase):
                     continue
                 inp = self._comm_cost(self.cost.source, r, nbytes)
             score = inp + self._step_cost(r, 0)
-            push(frontier, (r, self._mask_with(0, r)),
-                 (score, next(tie), r, self._mask_with(0, r), None), K)
+            mask = self._mask_with(0, r)
+            push(frontier, (r, mask, 0 if self._tracked(r) else -1),
+                 (score, next(tie), r, mask, None), K)
 
         for b in range(1, B):
-            nxt: dict[tuple[str, int], list[Entry]] = {}
+            nxt: dict[tuple[str, int, int], list[Entry]] = {}
             nbytes = float(self.cost.out_bytes[b - 1])
-            for (r, mask), entries in frontier.items():
-                for e in entries:
-                    # stay
-                    if self.cons.allowed(b, r):
-                        push(nxt, (r, mask),
-                             (e[0] + self._step_cost(r, b), next(tie), r,
-                              mask, e), K)
-                    # hand off to a later tier
-                    for r2 in self.names:
-                        if self.order[r2] <= self.order[r] or \
-                                not self.cons.allowed(b, r2) or \
-                                not self.cons.transition_allowed(r, r2, nbytes):
-                            continue
-                        m2 = self._mask_with(mask, r2)
-                        sc = e[0] + self._comm_cost(r, r2, nbytes) \
-                            + self._step_cost(r2, b)
-                        push(nxt, (r2, m2), (sc, next(tie), r2, m2, e), K)
+            for (r, mask, start), entries in frontier.items():
+                # stay: the open segment grows through block b (prune the
+                # moment it exceeds its compute-time cap)
+                if self.cons.allowed(b, r) and \
+                        (start < 0 or self._seg_ok(r, start, b)):
+                    step = self._step_cost(r, b)
+                    for e in entries:
+                        push(nxt, (r, mask, start),
+                             (e[0] + step, next(tie), r, mask, e), K)
+                # hand off to a later tier: closes [start..b-1] on r, which
+                # must meet r's min-block floor
+                if start >= 0 and not self._close_ok(r, start, b - 1):
+                    continue
+                for r2 in self.names:
+                    if self.order[r2] <= self.order[r] or \
+                            not self.cons.allowed(b, r2) or \
+                            not self.cons.transition_allowed(r, r2, nbytes) \
+                            or not self._seg_ok(r2, b, b):
+                        continue
+                    m2 = self._mask_with(mask, r2)
+                    s2 = b if self._tracked(r2) else -1
+                    hop = self._comm_cost(r, r2, nbytes) \
+                        + self._step_cost(r2, b)
+                    for e in entries:
+                        push(nxt, (r2, m2, s2),
+                             (e[0] + hop, next(tie), r2, m2, e), K)
             frontier = nxt
 
         finals: list[Entry] = []
-        for (r, mask), entries in frontier.items():
+        for (r, mask, start), entries in frontier.items():
             if mask != self.full_mask:
+                continue
+            if start >= 0 and not self._close_ok(r, start, B - 1):
                 continue
             finals.extend(entries)
         finals.sort(key=lambda e: e[0])
@@ -618,12 +713,10 @@ class PartitionLattice(_LatticeBase):
             if segs in seen:
                 continue
             seen.add(segs)
-            cfg = self.cost.evaluate(segs)
-            if self.cons.path_feasible(cfg):
-                out.append(cfg)
+            out.append(self.cost.evaluate(segs))
             if len(out) >= top_n:
                 break
-        return out[:top_n]
+        return out
 
     @staticmethod
     def _reconstruct(entry) -> tuple[Segment, ...]:
@@ -661,32 +754,39 @@ class BottleneckLattice(_LatticeBase):
     ``stage_period`` / ``hop_period``), so the DP stays exact at every
     operating point.  Complexity O(B²·R²·K·2^M) for M must-use resources.
 
-    Like :class:`PartitionLattice`, the path-dependent constraints
-    (``max_resource_time``, ``min_blocks_on``) are not part of the DP state;
-    they are enforced by post-filtering the k-best pool, which is widened
-    when such a constraint is present but remains an approximation: a
-    constraint binding enough to reject the whole pool yields fewer (or no)
-    results rather than a suboptimal-but-feasible one.
+    Because this DP works at whole-segment granularity, the path-dependent
+    constraints need **no state extension at all**: every transition (and
+    every terminal) names its segment's exact extent, so
+    ``max_resource_time`` and ``min_blocks_on`` are checked per transition
+    (``_seg_ok`` / ``_close_ok``) and infeasible segments never enter the
+    lattice — ``solve`` returns the true constrained optimum with no
+    post-filtering and no pool widening.
 
     Ties on the bottleneck value are broken by end-to-end latency across
     the *entire* reconstruction pool (every tied final is reconstructed
-    before truncating to ``top_n``).  Ties that exceed a single state's
-    k-best pool width can still be cut inside the DP — when the exact tied
-    surface matters, :class:`ParetoLattice` returns it: the minimum
-    (bottleneck, latency) point is always on the Pareto frontier.
+    before truncating to ``top_n``).  A tie wider than a single state's
+    k-best pool can still be cut *inside* the DP; the solver detects that
+    (a state dropped a candidate whose value ties the returned optimum)
+    and reconstructs the exact tied surface via :class:`ParetoLattice`
+    dispatch — the minimum (bottleneck, latency) point is always on the
+    Pareto frontier — so the returned optimum's latency tie-break is exact
+    regardless of pool width.
     """
+
+    # introspection state of the last solve (class-level defaults so an
+    # early-returning solve — infeasible / top_n <= 0 — reads as no-op)
+    _tie_cut = math.inf
+    _dispatched = False
 
     def solve(self, top_n: int = 1) -> list[PartitionConfig]:
         if top_n <= 0 or self.infeasible:
             return []
         B = self.cost.n_blocks
-        K = max(top_n * 4, top_n + 4)   # head-room for path-feasibility filter
-        if self.cons.max_resource_time or self.cons.min_blocks_on:
-            # path-dependent constraints are enforced by post-filtering the
-            # k-best pool (same stance as PartitionLattice); a binding
-            # constraint can reject every unconstrained winner, so keep a
-            # much deeper pool when one is present
-            K = max(K, 64)
+        # K == top_n is exact for the k-best *values*; the +head-room keeps
+        # more bottleneck-tied candidates in the pools so the latency
+        # tie-break rarely has to fall back to the Pareto dispatch below
+        K = max(top_n * 2, top_n + 2)
+        self._tie_cut = math.inf       # min value a full pool ever dropped
         names = self.names
         out_bytes = self.cost.out_bytes
         # longest allowed contiguous run starting at each (resource, block)
@@ -706,11 +806,19 @@ class BottleneckLattice(_LatticeBase):
                 n_run = run[r][b]
                 bit_r = self._bit(r)
                 # transitions are independent of the must-use mask — hoist
-                # the (end, r2) scan out of the need loop
-                term = self.cost.stage_period(r, b, B - 1) \
-                    if b + n_run >= B else None
+                # the (end, r2) scan out of the need loop.  Constraints on
+                # the segment itself (compute-time cap, min-block floor)
+                # are exact here: each candidate names its segment extent.
+                term = None
+                if b + n_run >= B and self._seg_ok(r, b, B - 1) \
+                        and self._close_ok(r, b, B - 1):
+                    term = self.cost.stage_period(r, b, B - 1)
                 trans: list[tuple] = []      # (base, end, rj, clear_bit)
                 for end in range(b, min(b + n_run, B - 1)):
+                    if not self._seg_ok(r, b, end):
+                        break            # segment time is monotone in end
+                    if not self._close_ok(r, b, end):
+                        continue
                     nbytes = float(out_bytes[end])
                     seg_t = self.cost.stage_period(r, b, end)
                     for rj, r2 in enumerate(names):
@@ -734,6 +842,8 @@ class BottleneckLattice(_LatticeBase):
                         for pos, ce in enumerate(child):
                             cands.append((max(base, ce[0]), end, ck, pos))
                     cands.sort(key=lambda t: t[0])
+                    if len(cands) > K:
+                        self._tie_cut = min(self._tie_cut, cands[K][0])
                     memo[(b, ri, need)] = cands[:K]
 
         finals: list[tuple[float, tuple[int, int, int], int]] = []
@@ -756,9 +866,9 @@ class BottleneckLattice(_LatticeBase):
         # ties in bottleneck are common (e.g. the input hop dominates), so
         # truncating the reconstruction pool before the (bottleneck,
         # latency) tie-break could cut a lower-latency config and return a
-        # strictly worse one.  Reconstruct until we hold top_n feasible
-        # configs AND the next candidate's value exceeds the top_n-th best
-        # bottleneck — i.e. collect every bottleneck-tied candidate first.
+        # strictly worse one.  Reconstruct until we hold top_n configs AND
+        # the next candidate's value exceeds the top_n-th best bottleneck —
+        # i.e. collect every bottleneck-tied candidate first.
         out: list[PartitionConfig] = []
         seen: set[tuple[Segment, ...]] = set()
         kth = math.inf                  # top_n-th smallest kept bottleneck
@@ -769,13 +879,48 @@ class BottleneckLattice(_LatticeBase):
             if segs in seen:
                 continue
             seen.add(segs)
-            cfg = self.cost.evaluate(segs)
-            if self.cons.path_feasible(cfg):
-                out.append(cfg)
-                if len(out) >= top_n:
-                    kth = sorted(c.bottleneck_s for c in out)[top_n - 1]
+            out.append(self.cost.evaluate(segs))
+            if len(out) >= top_n:
+                kth = sorted(c.bottleneck_s for c in out)[top_n - 1]
+        win = min((c.bottleneck_s for c in out), default=math.inf)
+        tol = win * (1 + 1e-12) + 1e-18
+        n_tied = sum(1 for c in out if c.bottleneck_s <= tol)
         out.sort(key=lambda c: (c.bottleneck_s, c.latency_s))
-        return out[:top_n]
+        out = out[:top_n]
+
+        # a full pool dropped a candidate that could tie the winner AND
+        # the winner genuinely ties (if a cut path tied the winner, at
+        # least two kept finals tie it too: swapping a dropped entry for a
+        # kept sibling only lowers the max-composed value, which cannot go
+        # below the global minimum — so a unique winner proves no tie was
+        # cut).  Only then is the tied surface possibly wider than the
+        # pools: reconstruct it exactly via ParetoLattice (the
+        # min-(bottleneck, latency) point is always on the Pareto
+        # frontier) and let it lead the ranking.  The double condition
+        # keeps this dispatch off the common no-tie path — suffix values
+        # exclude the prefix/input-hop floor, so ``_tie_cut`` alone
+        # under-estimates wildly and would fire on almost every solve.
+        self._dispatched = bool(out and n_tied >= 2
+                                and self._tie_cut <= tol)
+        if self._dispatched:
+            best = self._tied_surface_best(out[0].bottleneck_s)
+            if best is not None and best.segments not in seen:
+                out = [best, *out]
+                out.sort(key=lambda c: (c.bottleneck_s, c.latency_s))
+                out = out[:top_n]
+        return out
+
+    def _tied_surface_best(self, value: float) -> PartitionConfig | None:
+        """Exact min-(bottleneck, latency, transfer) config among those
+        whose bottleneck ties ``value``, via the Pareto frontier (which
+        always carries that point)."""
+        tol = value * (1 + 1e-12) + 1e-18
+        tied = [c for c in ParetoLattice(self.cost, self.cons).solve()
+                if c.bottleneck_s <= tol]
+        if not tied:
+            return None
+        return min(tied, key=lambda c: (c.bottleneck_s, c.latency_s,
+                                        c.transfer_bytes))
 
     def _reconstruct(self, memo, key, pos) -> tuple[Segment, ...]:
         segs: list[Segment] = []
@@ -863,10 +1008,16 @@ class ParetoLattice(_LatticeBase):
 
     Constraints: ``must_use`` (via the mask), ``exclude``/``pin`` (via
     ``allowed``) and ``max_link_bytes`` (via ``transition_allowed``) are
-    exact in the DP.  The path-dependent ``max_resource_time`` /
-    ``min_blocks_on`` are enforced by post-filtering reconstructed
-    configs — same stance as the other lattices, and the exhaustive
-    strategy remains the oracle for those.
+    exact in the DP, and so are the path-dependent ``max_resource_time`` /
+    ``min_blocks_on``: for resources they name, the state key carries the
+    open segment's start block (see ``_LatticeBase``), so over-cap
+    extensions are pruned the moment they occur and under-floor segment
+    closes are rejected — labels within a state remain interchangeable
+    prefixes and dominance pruning stays exact.  The split states' label
+    sets rejoin in the global non-dominated filter over completed vectors,
+    so the returned frontier is the true constrained frontier with no
+    post-filtering (the exhaustive strategy remains the validation
+    oracle).
     """
 
     def __init__(self, cost: CostModel,
@@ -892,10 +1043,11 @@ class ParetoLattice(_LatticeBase):
         self.labels_kept = self.labels_pruned = 0
         if self.infeasible:
             return []
-        # state -> ((L, 4) label array, parallel [(prev_key, prev_idx)])
-        cur: dict[tuple[str, int], tuple[np.ndarray, list]] = {}
+        # state (resource, mask, open-seg start | -1 if untracked) ->
+        # ((L, 4) label array, parallel [(prev_key, prev_idx)])
+        cur: dict[tuple[str, int, int], tuple[np.ndarray, list]] = {}
         for r in self.names:
-            if not self.cons.allowed(0, r):
+            if not self.cons.allowed(0, r) or not self._seg_ok(r, 0, 0):
                 continue
             lat = bneck = xfer = 0.0
             if r != cost.source:
@@ -906,23 +1058,30 @@ class ParetoLattice(_LatticeBase):
                 bneck = cost.hop_period(cost.source, r, nbytes)
                 xfer = nbytes
             step = cost.segment_time(r, 0, 0)
-            cur[(r, self._mask_with(0, r))] = (
+            key = (r, self._mask_with(0, r), 0 if self._tracked(r) else -1)
+            cur[key] = (
                 np.array([[lat + step, bneck, xfer, step]]), [(None, -1)])
         hist = [cur]
         for b in range(1, B):
             nbytes = float(cost.out_bytes[b - 1])
-            groups: dict[tuple[str, int], list] = {}
-            for (r, mask), (arr, metas) in cur.items():
-                refs = [((r, mask), i) for i in range(len(metas))]
-                if self.cons.allowed(b, r):        # extend the open segment
+            groups: dict[tuple[str, int, int], list] = {}
+            for (r, mask, start), (arr, metas) in cur.items():
+                refs = [((r, mask, start), i) for i in range(len(metas))]
+                if self.cons.allowed(b, r) and \
+                        (start < 0 or self._seg_ok(r, start, b)):
+                    # extend the open segment (pruned the moment it would
+                    # exceed its compute-time cap)
                     step = cost.segment_time(r, b, b)
-                    groups.setdefault((r, mask), []).append(
+                    groups.setdefault((r, mask, start), []).append(
                         (arr + np.array([step, 0.0, 0.0, step]), refs))
+                if start >= 0 and not self._close_ok(r, start, b - 1):
+                    continue               # closing would violate the floor
                 div = self._div(r)
                 for r2 in self.names:              # close it and hand off
                     if self.order[r2] <= self.order[r] or \
                             not self.cons.allowed(b, r2) or \
-                            not self.cons.transition_allowed(r, r2, nbytes):
+                            not self.cons.transition_allowed(r, r2, nbytes) \
+                            or not self._seg_ok(r2, b, b):
                         continue
                     hop = cost.comm(r, r2, nbytes)
                     hop_p = cost.hop_period(r, r2, nbytes)
@@ -933,8 +1092,9 @@ class ParetoLattice(_LatticeBase):
                         np.maximum(arr[:, 1], arr[:, 3] / div), hop_p)
                     a2[:, 2] = arr[:, 2] + nbytes
                     a2[:, 3] = step2
-                    groups.setdefault((r2, self._mask_with(mask, r2)),
-                                      []).append((a2, refs))
+                    key2 = (r2, self._mask_with(mask, r2),
+                            b if self._tracked(r2) else -1)
+                    groups.setdefault(key2, []).append((a2, refs))
             cur = {}
             for key, chunks in groups.items():
                 arr = chunks[0][0] if len(chunks) == 1 else \
@@ -947,17 +1107,20 @@ class ParetoLattice(_LatticeBase):
             hist.append(cur)
 
         # close every final open segment and filter the completed vectors
-        finals: list[tuple[tuple[str, int], int]] = []
+        # (states split by open-seg start rejoin here: the filter is global)
+        finals: list[tuple[tuple[str, int, int], int]] = []
         vecs: list[np.ndarray] = []
-        for (r, mask), (arr, metas) in cur.items():
+        for (r, mask, start), (arr, metas) in cur.items():
             if mask != self.full_mask:
+                continue
+            if start >= 0 and not self._close_ok(r, start, B - 1):
                 continue
             vec = np.empty((len(arr), 3))
             vec[:, 0] = arr[:, 0]
             vec[:, 1] = np.maximum(arr[:, 1], arr[:, 3] / self._div(r))
             vec[:, 2] = arr[:, 2]
             for i in range(len(arr)):
-                finals.append(((r, mask), i))
+                finals.append(((r, mask, start), i))
                 vecs.append(vec[i])
         if not finals:
             return []
@@ -970,12 +1133,11 @@ class ParetoLattice(_LatticeBase):
             if segs in seen:
                 continue
             seen.add(segs)
-            cfg = cost.evaluate(segs)
-            if self.cons.path_feasible(cfg):
-                out.append(cfg)
-        # authoritative filter on the re-evaluated configs (path-dependent
-        # constraints may have removed members; evaluate() is the single
-        # source of truth for the objective vectors)
+            out.append(cost.evaluate(segs))
+        # authoritative re-filter on the re-evaluated configs: the DP's
+        # label arithmetic accumulates sums incrementally while evaluate()
+        # uses prefix-sum differences, and evaluate() is the single source
+        # of truth for the objective vectors
         out = pareto_frontier(out)
         out.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
                                 c.transfer_bytes))

@@ -263,9 +263,11 @@ class QueryEngine:
           ``Query.frontier_epsilon`` > 0 trades a bounded relative error
           for smaller label sets on fleet-sized spaces; label-set
           statistics land on ``QueryResult.labels_kept`` /
-          ``labels_pruned``.  Path-dependent constraints
-          (``max_resource_time`` / ``min_blocks_on``) are post-filtered,
-          as in every lattice.
+          ``labels_pruned``.  Every constraint — including the
+          path-dependent ``max_resource_time`` / ``min_blocks_on`` — is
+          folded into the DP state, so both strategies return the same
+          result set on every constrained query (no post-filtering that
+          could under-fill the lattice result).
 
         Points from every swept operating point compete in one final
         Pareto filter, so the result is the exact global frontier over the
@@ -336,9 +338,15 @@ class QueryEngine:
         admissible pipe — shared by the k-best and frontier lattice paths
         so both honor identical restrictions."""
         all_names = {r.name for r in self.resources}
+        # a pipe missing a demanded resource (must_use, or a min_blocks_on
+        # floor >= 1, which implies presence) can never yield a feasible
+        # config — skip the solve instead of letting the lattice discover
+        # the infeasibility
+        need = set(query.must_use) | {
+            r for r, n in query.min_blocks_on.items() if n >= 1}
         for pipe in self._valid_pipelines(query.pipelines):
             members = set(pipe)
-            if any(m not in members for m in query.must_use):
+            if any(m not in members for m in need):
                 continue
             if members & set(query.exclude):
                 continue

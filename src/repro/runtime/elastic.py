@@ -16,11 +16,12 @@ aggregate) followed by a re-query.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable
 
 from repro.core.network import NetworkModel
-from repro.core.partition import PartitionConfig, objective_vector
+from repro.core.partition import (PartitionConfig, objective_vector,
+                                  pareto_frontier, trim_replicas)
 from repro.core.planner import Scission
 from repro.core.query import Query
 from repro.core.resources import Resource
@@ -80,21 +81,45 @@ class ElasticController:
     batch size and replica budget (and with them the serving engine's
     admission width) survive resource loss, join, and bandwidth shifts.
 
-    With ``track_frontier=True`` every re-plan additionally extracts the
-    Pareto frontier over (latency, throughput, transfer) at the new
-    membership/network state and stores it on the :class:`PlanEvent`, so
-    an operational change reports how the whole trade-off surface moved
-    (:meth:`last_frontier_shift`), not just the single winner."""
+    With ``track_frontier=True`` every re-plan extracts the Pareto
+    frontier over (latency, throughput, transfer) at the new
+    membership/network state, stores it on the :class:`PlanEvent`, and
+    derives the plan's config **from the frontier** — the objective-best
+    point is on the surface by construction (for any non-negative-weight
+    objective, a dominated config never scores strictly better than all
+    of its dominators), so a frontier-mode re-plan costs a single solve
+    instead of a full ``query()`` followed by a full ``frontier()``.
+    Unless ``Query.batch_sizes`` is set explicitly, the re-plan sweep is
+    pinned to ``Query.batch_size`` so the active operating point is
+    preserved across re-plans exactly like the non-frontier mode (the
+    derived config's replicas are trimmed to the minimum achieving its
+    bottleneck, which leaves the rate unchanged).  An explicit
+    ``Query(batch_sizes=...)`` opts into tracking a wider surface, and
+    then the derived config is the objective-best point across that sweep
+    — its batch may move when a better operating point appears.
+
+    ``warm_start=True`` (default) re-seeds each frontier-mode re-plan
+    with the previous surface's still-valid points
+    (:meth:`_warm_start_candidates`): points whose resources survived the
+    membership change are re-priced against the current engine and merged
+    into the new surface.  At ``frontier_epsilon == 0`` the merge cannot
+    change the (already exact) result; with ε > 0 it pins previously
+    discovered exact points so a re-plan's approximate surface never
+    loses coverage on the unchanged part of the space.  Override the
+    method to grow a fully incremental frontier update behind the same
+    seam."""
 
     def __init__(self, scission: Scission, model: str,
                  input_bytes: float = 150e3, query: Query | None = None,
-                 graph=None, track_frontier: bool = False):
+                 graph=None, track_frontier: bool = False,
+                 warm_start: bool = True):
         self.scission = scission
         self.model = model
         self.input_bytes = input_bytes
         self.query = query or Query(top_n=1)
         self.graph = graph            # for incremental benchmarking on join
         self.track_frontier = track_frontier
+        self.warm_start = warm_start
         self.history: list[PlanEvent] = []
         self._replan("initial")
 
@@ -102,17 +127,71 @@ class ElasticController:
     def current(self) -> PartitionConfig:
         return self.history[-1].config
 
+    def _last_frontier(self) -> list[PartitionConfig] | None:
+        for ev in reversed(self.history):
+            if ev.frontier is not None:
+                return ev.frontier
+        return None
+
+    def _warm_start_candidates(self, prev: list[PartitionConfig]
+                               ) -> list[PartitionConfig]:
+        """Previous-frontier points that remain valid under the current
+        membership and constraints, re-priced against the current engine
+        (bandwidth may have shifted, so costs are recomputed; only the
+        *shape* — segments, batch size — is reused)."""
+        eng = self.scission.engine(self.model, self.input_bytes)
+        cons = self.query.constraints()
+        names = {r.name for r in self.scission.resources}
+        out: list[PartitionConfig] = []
+        for cfg in prev:
+            if not set(cfg.resources) <= names:
+                continue              # a member resource left the fleet
+            try:
+                cost = eng._cost_for(
+                    _dc_replace(self.query, batch_size=cfg.batch_size))
+            except ValueError:
+                continue              # batch no longer measurable
+            cfg2 = cost.evaluate(cfg.segments)
+            if eng._config_satisfies(cfg2, cons, cost):
+                out.append(trim_replicas(cfg2))
+        return out
+
     def _replan(self, reason: str) -> PlanEvent:
         t0 = time.perf_counter()
-        res = self.scission.query(self.model, self.query, self.input_bytes)
-        front = None
         if self.track_frontier:
-            front = self.scission.frontier(self.model, self.query,
+            # one solve: the frontier carries the objective-best point, so
+            # no separate query() pass is needed.  Pin the sweep to the
+            # query's batch size (unless the caller asked for a wider one)
+            # so the active operating point survives re-plans.
+            fq = self.query if self.query.batch_sizes is not None else \
+                _dc_replace(self.query,
+                            batch_sizes=(self.query.batch_size,))
+            prev = self._last_frontier() if self.warm_start else None
+            front = self.scission.frontier(self.model, fq,
                                            self.input_bytes).configs
-        # plan_time_s covers the full re-plan, frontier extraction included
+            if prev:
+                merged = {(c.segments, c.batch_size, c.replicas): c
+                          for c in (*front,
+                                    *self._warm_start_candidates(prev))}
+                front = pareto_frontier(list(merged.values()))
+                front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
+                                          c.transfer_bytes))
+            if not front:
+                raise ValueError(
+                    f"re-plan ({reason}) found no feasible configuration "
+                    f"for model {self.model!r} under the current "
+                    "membership and constraints")
+            score = self.query.objective.score
+            config = min(front, key=lambda c: (score(c),
+                                               objective_vector(c)))
+        else:
+            res = self.scission.query(self.model, self.query,
+                                      self.input_bytes)
+            front = None
+            config = res.best
         ev = PlanEvent(reason=reason, wall_time=time.time(),
                        plan_time_s=time.perf_counter() - t0,
-                       config=res.best, frontier=front)
+                       config=config, frontier=front)
         self.history.append(ev)
         return ev
 

@@ -14,6 +14,7 @@ runs single-host but the phase boundary and cache handoff are the same.
 
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -71,14 +72,19 @@ def simulate_pipeline_throughput(config: PartitionConfig,
     benchmarks/bench_partitions.py uses this to validate predicted vs.
     simulated throughput.
 
-    Raises ``ValueError`` for ``n_requests < 2`` or a config with no
+    Raises ``ValueError`` for ``n_requests < 2``, a config with no
     pipeline stages — there is no steady state to measure, and the old
-    ``inf`` return silently poisoned predicted-vs-simulated comparisons.
+    ``inf`` return silently poisoned predicted-vs-simulated comparisons —
+    or a ``replicas`` entry below 1 (a zero-replica stage serves nothing;
+    the old code would round-robin over an empty server list).
     """
     if n_requests < 2:
         raise ValueError(
             f"need at least 2 requests to measure a steady-state rate, "
             f"got n_requests={n_requests}")
+    if any(r < 1 for r in config.replicas):
+        raise ValueError(
+            f"every replicas entry must be >= 1, got {config.replicas}")
     batch = max(1, config.batch_size)
     stages: list[tuple[float, int]] = []       # (per-batch time, replicas)
     if config.input_comm_s > 0.0:
@@ -93,9 +99,14 @@ def simulate_pipeline_throughput(config: PartitionConfig,
             "evaluate it through CostModel.evaluate before simulating")
     # enough batches that every replica set wraps around several times —
     # fewer and the measured span can be zero (all in-flight batches finish
-    # simultaneously on distinct servers, no steady state yet)
+    # simultaneously on distinct servers, no steady state yet).  The joint
+    # pattern of a replicated pipeline repeats with period lcm(replicas) in
+    # batch index, so the run must also cover whole joint periods.
     max_reps = max(reps for _, reps in stages)
-    n_batches = max(2, 4 * max_reps, -(-n_requests // batch))
+    period = math.lcm(*(reps for _, reps in stages))
+    warm = 2 * max_reps               # fill-up: every set wraps >= twice
+    n_batches = max(4 * max_reps, 2 * (warm + period + 1),
+                    -(-n_requests // batch))
     finish = [[0.0] * reps for _, reps in stages]
     done: list[float] = []
     for i in range(n_batches):
@@ -105,14 +116,19 @@ def simulate_pipeline_throughput(config: PartitionConfig,
             finish[s][srv] = max(prev, finish[s][srv]) + dt
             prev = finish[s][srv]
         done.append(prev)
-    # measure the steady-state rate over the second half (skip fill-up)
-    half = len(done) // 2
-    span = done[-1] - done[half - 1]
+    # measure the steady-state rate over (roughly) the second half, but:
+    # start only after every replica set has wrapped at least twice, and
+    # measure a whole number of joint periods — finish times within a wrap
+    # are bursty, so a window that cuts a period mid-wrap biases the rate
+    lo = max(len(done) // 2, warm + 1)
+    whole = (len(done) - lo) // period * period
+    start = len(done) - whole
+    span = done[-1] - done[start - 1]
     if span <= 0.0:
         raise ValueError(
             "steady-state span is zero (every stage time is zero?) — "
             "cannot measure a finite pipeline rate")
-    return (len(done) - half) / span * batch
+    return whole / span * batch
 
 
 @dataclass

@@ -1,0 +1,442 @@
+"""Constraint-exact lattices: the path-dependent constraints
+(``max_resource_time`` / ``min_blocks_on``) are folded into the DP state
+of all three lattices, so every ``solve()``/frontier equals the exhaustive
+oracle even when a constraint binds hard enough that the old post-filtered
+k-best pools returned fewer — or zero — results.
+
+Costs are dyadic (times a/2^10, power-of-two bandwidths), so every
+cost-model sum/max/division is exact in float64 and strategies can be
+compared with exact equality.  Also covers the satellite regressions that
+shipped with the tentpole: the BottleneckLattice wide-tie Pareto dispatch,
+the elastic controller's single-solve frontier re-plan + warm start, and
+the pipeline simulator's steady-state window / replica validation.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (Constraints, CostModel, LATENCY, Link, NetworkModel,
+                        ParetoLattice, Query, QueryEngine, Resource,
+                        enumerate_partitions, objective_vector,
+                        pareto_frontier, rank)
+from repro.core.partition import BottleneckLattice, PartitionLattice, Segment
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+import repro.core.query as query_mod
+
+from test_frontier_exact import _grid_space, _make_db
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # degrade to the deterministic tests only
+    HAVE_HYPOTHESIS = False
+
+_vec = objective_vector
+
+
+def _oracle(eng, cons, cost):
+    """Exhaustively enumerated feasible set (the validation oracle)."""
+    return [c for c in enumerate_partitions(cost)
+            if eng._config_satisfies(c, cons, cost)]
+
+
+def _random_engine_and_query(seed):
+    """A random small space with dyadic costs plus a *path-dependent*
+    constraint draw: a compute-time cap at a fraction of a resource's total
+    time (often binding, sometimes unsatisfiable) and/or a min-block floor
+    in 1..n_blocks+1 (n_blocks+1 == infeasible on purpose)."""
+    rng = np.random.default_rng(seed)
+    n_blocks = int(rng.integers(3, 7))
+    batches = (1,) if rng.integers(2) else (1, 2)
+    res = [Resource("device0", "device", RPI4)]
+    res += [Resource(f"edge{i}", "edge", EDGE_BOX_1)
+            for i in range(int(rng.integers(0, 3)))]
+    res += [Resource(f"cloud{i}", "cloud", CLOUD_VM)
+            for i in range(int(rng.integers(1, 3)))]
+    names = [r.name for r in res]
+    times = {}
+    for r in names:
+        for b in range(n_blocks):
+            t1 = int(rng.integers(1, 1 << 10)) / (1 << 10)
+            times[(r, b, 1)] = t1
+            if 2 in batches:
+                times[(r, b, 2)] = t1 + int(rng.integers(0, 1 << 10)) / (1 << 10)
+    out_bytes = [int(rng.integers(1, 1 << 14)) for _ in range(n_blocks)]
+    db = _make_db("rand", n_blocks, res, times, out_bytes, batches)
+
+    def link(tag):
+        return Link(tag, int(rng.integers(0, 1 << 6)) / (1 << 10),
+                    float(1 << int(rng.integers(14, 23))))
+
+    net = NetworkModel(default=link("d"))
+    for a, b in itertools.permutations(names, 2):
+        if rng.random() < 0.4:
+            net.connect(a, b, link(f"{a}-{b}"), symmetric=False)
+    eng = QueryEngine(db, res, net, source="device0",
+                      input_bytes=float(rng.integers(1, 1 << 16)))
+    kw = {}
+    kind = int(rng.integers(3))          # 0: tmax, 1: nmin, 2: both
+    if kind in (0, 2):
+        r = str(rng.choice(names))
+        total = sum(times[(r, b, 1)] for b in range(n_blocks))
+        frac = [0.25, 0.5, 0.75][int(rng.integers(3))]   # dyadic
+        kw["max_resource_time"] = {r: total * frac}
+    if kind in (1, 2):
+        r = str(rng.choice(names))
+        kw["min_blocks_on"] = {r: int(rng.integers(1, n_blocks + 2))}
+    if rng.integers(2):
+        kw["must_use"] = (str(rng.choice(names)),)
+    if rng.integers(2):
+        kw["replicas"] = {str(rng.choice(names)): 2}
+    return eng, Query(batch_sizes=batches, **kw)
+
+
+def _assert_all_lattices_match_oracle(seed):
+    """Acceptance property: with binding path-dependent constraints, each
+    lattice's solve()/frontier equals the exhaustive oracle — including
+    the under-fill cases (oracle non-empty, old lattices returned fewer or
+    zero results) and the genuinely infeasible ones (both empty)."""
+    eng, query = _random_engine_and_query(seed)
+    cons = query.constraints()
+    cost = eng._cost_for(query)
+    feas = _oracle(eng, cons, cost)
+    # k-best additive DP: exact score sequence, all results feasible
+    for top_n in (1, 5):
+        got = PartitionLattice(cost, cons).solve(top_n=top_n)
+        want = rank(feas, LATENCY, top_n)
+        assert [c.latency_s for c in got] == [c.latency_s for c in want]
+        for c in got:
+            assert eng._config_satisfies(c, cons, cost)
+    # minimax DP: exact constrained optimum with exact latency tie-break
+    got_b = BottleneckLattice(cost, cons).solve(top_n=1)
+    if feas:
+        wb = min(c.bottleneck_s for c in feas)
+        wl = min(c.latency_s for c in feas if c.bottleneck_s == wb)
+        assert got_b, "feasible space must not yield an empty result"
+        assert got_b[0].bottleneck_s == wb
+        assert got_b[0].latency_s == wl
+    else:
+        assert got_b == []
+    # label-correcting DP: exact constrained frontier
+    got_f = {_vec(c) for c in ParetoLattice(cost, cons).solve()}
+    assert got_f == {_vec(c) for c in pareto_frontier(feas)}
+    # engine strategies agree across the swept operating points
+    exh = eng.frontier(query, strategy="exhaustive")
+    lat = eng.frontier(query, strategy="lattice")
+    assert {_vec(c) for c in lat.configs} == {_vec(c) for c in exh.configs}
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_constrained_lattices_equal_oracle(seed):
+    _assert_all_lattices_match_oracle(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10 ** 9))
+    @settings(max_examples=30, deadline=None)
+    def test_constrained_lattices_property(seed):
+        _assert_all_lattices_match_oracle(seed)
+
+
+class TestBindingConstraintsDeterministic:
+    """The under-fill regression and compound-constraint cases on the
+    deterministic grid space."""
+
+    @pytest.mark.parametrize("cons", [
+        Constraints(max_resource_time={"device0": 0.05}),
+        Constraints(min_blocks_on={"device0": 3}),
+        Constraints(min_blocks_on={"edge0": 2},
+                    max_resource_time={"edge0": 0.25}),
+        Constraints(min_blocks_on={"device0": 2, "cloud0": 2}),
+        Constraints(must_use=("edge1",), max_resource_time={"edge1": 0.05}),
+    ])
+    def test_lattices_match_oracle(self, cons):
+        eng = _grid_space()
+        cost = eng.cost
+        feas = _oracle(eng, cons, cost)
+        assert feas, "scenario must be feasible for the under-fill check"
+        got = PartitionLattice(cost, cons).solve(top_n=4)
+        want = rank(feas, LATENCY, 4)
+        assert [c.latency_s for c in got] == [c.latency_s for c in want]
+        got_f = {_vec(c) for c in ParetoLattice(cost, cons).solve()}
+        assert got_f == {_vec(c) for c in pareto_frontier(feas)}
+
+    def test_binding_constraint_cannot_underfill(self):
+        """Regression: a floor demanding nearly every block on the slow
+        device rejects every unconstrained pool winner; the old
+        post-filter returned fewer (often zero) results even though
+        feasible configs exist."""
+        eng = _grid_space()
+        cost = eng.cost
+        cons = Constraints(min_blocks_on={"device0": cost.n_blocks - 1})
+        feas = _oracle(eng, cons, cost)
+        assert feas
+        got = PartitionLattice(cost, cons).solve(top_n=3)
+        assert len(got) == min(3, len(feas))
+        assert got[0].latency_s == min(c.latency_s for c in feas)
+        got_b = BottleneckLattice(cost, cons).solve(top_n=1)
+        assert got_b and got_b[0].bottleneck_s == \
+            min(c.bottleneck_s for c in feas)
+
+    def test_unsatisfiable_floor_matches_oracle_empty(self):
+        eng = _grid_space()
+        cost = eng.cost
+        for cons in (Constraints(min_blocks_on={"device0": 99}),
+                     Constraints(min_blocks_on={"nosuch": 1}),
+                     Constraints(exclude=("edge0",),
+                                 min_blocks_on={"edge0": 1}),
+                     Constraints(max_resource_time={"cloud0": 0.0},
+                                 must_use=("cloud0",))):
+            assert _oracle(eng, cons, cost) == []
+            assert PartitionLattice(cost, cons).solve(top_n=3) == []
+            assert BottleneckLattice(cost, cons).solve(top_n=3) == []
+            assert ParetoLattice(cost, cons).solve() == []
+
+    def test_zero_floor_is_trivially_satisfied(self):
+        """path_feasible accepts an absent resource at floor 0, so the
+        lattice must not fold a zero floor into the must-use mask."""
+        eng = _grid_space()
+        cost = eng.cost
+        cons = Constraints(min_blocks_on={"cloud0": 0})
+        free = PartitionLattice(cost).solve(top_n=3)
+        got = PartitionLattice(cost, cons).solve(top_n=3)
+        assert [c.latency_s for c in got] == [c.latency_s for c in free]
+
+    def test_run_strategies_agree_on_constrained_query(self, monkeypatch):
+        q = Query(top_n=3, max_resource_time={"device0": 0.05},
+                  min_blocks_on={"edge0": 2})
+        want = _grid_space().run(q)
+        assert want.strategy == "exhaustive" and want.configs
+        monkeypatch.setattr(query_mod, "EXHAUSTIVE_LIMIT", -1)
+        got = _grid_space().run(q)
+        assert got.strategy == "lattice"
+        assert [c.latency_s for c in got.configs] == \
+            [c.latency_s for c in want.configs]
+
+    def test_restricted_pipelines_with_floor(self):
+        """Per-pipe lattice solves skip pipes that cannot host a demanded
+        floor and stay oracle-exact on the rest."""
+        eng = _grid_space()
+        q = Query(min_blocks_on={"cloud0": 2},
+                  pipelines=(("device0", "edge0"),       # no cloud0 -> dead
+                             ("device0", "cloud0"),
+                             ("device0", "edge0", "cloud0")))
+        exh = eng.frontier(q, strategy="exhaustive")
+        lat = eng.frontier(q, strategy="lattice")
+        assert exh.configs
+        assert {_vec(c) for c in lat.configs} == \
+            {_vec(c) for c in exh.configs}
+        for c in lat.configs:
+            assert sum(s.end - s.start + 1 for s in c.segments
+                       if s.resource == "cloud0") >= 2
+
+
+class TestBottleneckWideTies:
+    def test_tie_wider_than_pool_dispatches_to_pareto(self):
+        """Regression (ROADMAP follow-up): a bottleneck tie wider than a
+        state's k-best pool used to cut the lowest-latency tied config
+        inside the DP; the solver must detect the cut and reconstruct the
+        tied surface via ParetoLattice dispatch."""
+        res = [Resource("device0", "device", RPI4)]
+        res += [Resource(f"edge{i}", "edge", EDGE_BOX_1) for i in range(6)]
+        res += [Resource("cloud0", "cloud", CLOUD_VM)]
+        n_blocks = 2
+        times = {}
+        for r in res:
+            # device: cheap first block, prohibitive second (native device
+            # never ties); edges equal; cloud strictly fastest and LAST in
+            # insertion order, so the tied pool drops it first
+            t = {"device": [1 / 64, 4.0], "edge": [1 / 8, 1 / 8],
+                 "cloud": [1 / 32, 1 / 32]}[r.tier]
+            for b in range(n_blocks):
+                times[(r.name, b, 1)] = t[b]
+        out_bytes = [1 << 20] * n_blocks
+        db = _make_db("ties", n_blocks, res, times, out_bytes)
+        # shared hop time 1.0 dominates every stage -> every device->X
+        # config ties at bottleneck 1.0; a huge input keeps off-device
+        # starts above the tie
+        net = NetworkModel(default=Link("slow", 0.0, float(1 << 20)))
+        cost = CostModel(db=db, resources=res, network=net, source="device0",
+                         input_bytes=float(1 << 22))
+        configs = enumerate_partitions(cost)
+        best_b = min(c.bottleneck_s for c in configs)
+        tied = [c for c in configs if c.bottleneck_s == best_b]
+        lattice = BottleneckLattice(cost)
+        K = max(1 * 2, 1 + 2)
+        assert len(tied) > K, "scenario must out-tie the k-best pool"
+        oracle = min(tied, key=lambda c: c.latency_s)
+        got = lattice.solve(top_n=1)[0]
+        assert lattice._dispatched       # the cut tie was detected
+        assert got.bottleneck_s == pytest.approx(best_b)
+        assert got.resources == ("device0", "cloud0")
+        assert got.latency_s == pytest.approx(oracle.latency_s)
+
+    def test_unique_winner_skips_pareto_dispatch(self):
+        """Regression: the dispatch trigger compared a dropped *suffix*
+        value (which excludes the input hop / prefix maximum) against the
+        full-path winner, so it fired on essentially every solve and paid
+        a full ParetoLattice extraction; a unique winner proves no tie was
+        cut, so the dispatch must stay off."""
+        eng = _grid_space()
+        lattice = BottleneckLattice(eng.cost)
+        got = lattice.solve(top_n=1)
+        assert got
+        assert not lattice._dispatched
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_rank0_latency_tie_break_exact_on_random_spaces(self, seed):
+        eng, query = _random_engine_and_query(seed)
+        cost = eng._cost_for(query)
+        cons = query.constraints()
+        feas = _oracle(eng, cons, cost)
+        got = BottleneckLattice(cost, cons).solve(top_n=1)
+        if not feas:
+            assert got == []
+            return
+        wb = min(c.bottleneck_s for c in feas)
+        assert got[0].bottleneck_s == wb
+        assert got[0].latency_s == min(c.latency_s for c in feas
+                                       if c.bottleneck_s == wb)
+
+
+class TestElasticSingleSolve:
+    def _scission(self, link=None, batches=(1,)):
+        from repro.core import Scission, AnalyticProvider, linear_graph
+        from repro.core.graph import LayerNode
+        import jax, jax.numpy as jnp
+        layers = [LayerNode(f"l{i}", "dense",
+                            apply=lambda x: x * 1.0,
+                            flops=float((i + 1) * 5e7)) for i in range(5)]
+        g = linear_graph("toy-ce", jax.ShapeDtypeStruct((1, 8), jnp.float32),
+                         layers)
+        res = [Resource("device", "device", RPI4, speed_factor=30.0),
+               Resource("edge1", "edge", EDGE_BOX_1, speed_factor=3.0),
+               Resource("cloud", "cloud", CLOUD_VM, speed_factor=1.0)]
+        net = NetworkModel(default=link or Link("l", 0.01, 1e6))
+        s = Scission(resources=res, network=net, source="device",
+                     provider=AnalyticProvider(), runs=1)
+        s.benchmark(g, batch_sizes=batches)
+        return s
+
+    def test_frontier_mode_replans_with_one_solve(self, monkeypatch):
+        """Satellite: frontier-mode re-plans used to run scission.query()
+        AND scission.frontier() — two full solves; the config now derives
+        from the extracted frontier, so query() is never called."""
+        from repro.core import Scission
+        from repro.runtime.elastic import ElasticController
+        calls = {"query": 0}
+        orig = Scission.query
+
+        def spy(self, *a, **kw):
+            calls["query"] += 1
+            return orig(self, *a, **kw)
+
+        monkeypatch.setattr(Scission, "query", spy)
+        s = self._scission()
+        ctl = ElasticController(s, "toy-ce", track_frontier=True)
+        ctl.on_network_change(NetworkModel(default=Link("f", 0.0, 1e12)))
+        assert calls["query"] == 0
+        # non-frontier mode still goes through query()
+        ctl2 = ElasticController(self._scission(), "toy-ce")
+        assert ctl2.current is not None
+        assert calls["query"] == 1
+
+    def test_config_is_objective_best_frontier_point(self):
+        from repro.runtime.elastic import ElasticController
+        s = self._scission()
+        want = s.frontier("toy-ce", Query(top_n=1)).configs
+        ctl = ElasticController(s, "toy-ce", track_frontier=True)
+        ev = ctl.history[0]
+        assert ev.frontier is not None
+        assert _vec(ev.config) in {_vec(c) for c in ev.frontier}
+        assert ev.config.latency_s == min(c.latency_s for c in want)
+
+    def test_warm_start_revalidates_previous_surface(self):
+        from repro.runtime.elastic import ElasticController
+        s = self._scission()
+        ctl = ElasticController(s, "toy-ce", track_frontier=True)
+        prev = ctl.history[0].frontier
+        assert prev
+        ev = ctl.on_resource_lost("edge1")
+        # warm-start candidates never resurrect the lost resource and are
+        # re-priced/feasible under the new membership
+        cands = ctl._warm_start_candidates(prev)
+        assert all("edge1" not in c.resources for c in cands)
+        assert all("edge1" not in c.resources for c in ev.frontier)
+        # the merged surface is still the exact frontier at the new state
+        fresh = ctl.scission.frontier("toy-ce", ctl.query).configs
+        assert {_vec(c) for c in ev.frontier} == {_vec(c) for c in fresh}
+        assert ctl.last_frontier_shift() is not None
+
+    def test_frontier_mode_preserves_operating_point(self):
+        """Regression: deriving the config from a frontier swept over
+        every measured batch could silently move the plan (and with it
+        the serving admission width) to a different batch size; the
+        re-plan sweep is pinned to Query.batch_size unless the caller
+        explicitly asks for a wider surface."""
+        from repro.runtime.elastic import ElasticController
+        s = self._scission(batches=(1, 4))
+        ctl = ElasticController(s, "toy-ce",
+                                query=Query(top_n=1, batch_size=4),
+                                track_frontier=True)
+        assert ctl.current.batch_size == 4
+        ev = ctl.on_resource_lost("edge1")
+        assert ev.config.batch_size == 4
+        assert all(c.batch_size == 4 for c in ev.frontier)
+        # an explicit batch_sizes sweep opts into the wider surface
+        ctl2 = ElasticController(
+            self._scission(batches=(1, 4)), "toy-ce",
+            query=Query(top_n=1, batch_size=4, batch_sizes=(1, 4)),
+            track_frontier=True)
+        assert ctl2.history[0].frontier
+
+    def test_warm_start_off_still_exact(self):
+        from repro.runtime.elastic import ElasticController
+        s = self._scission()
+        ctl = ElasticController(s, "toy-ce", track_frontier=True,
+                                warm_start=False)
+        ev = ctl.on_resource_lost("edge1")
+        fresh = ctl.scission.frontier("toy-ce", ctl.query).configs
+        assert {_vec(c) for c in ev.frontier} == {_vec(c) for c in fresh}
+
+
+class TestSimulatorWindow:
+    def _cfg(self, stage_compute, stage_comm, replicas):
+        from repro.core.partition import PartitionConfig
+        names = "abcdefgh"
+        segs = tuple(Segment(names[i], i, i)
+                     for i in range(len(stage_compute)))
+        return PartitionConfig(
+            model="sim", segments=segs, latency_s=sum(stage_compute),
+            compute_s={}, comm_s=sum(stage_comm),
+            transfer_bytes=0.0, stage_compute_s=tuple(stage_compute),
+            stage_comm_s=tuple(stage_comm), replicas=tuple(replicas))
+
+    def test_rejects_replicas_below_one(self):
+        from repro.serving.engine import simulate_pipeline_throughput
+        for bad in ((0,), (2, 0), (-1, 1)):
+            cfg = self._cfg([1.0] * len(bad), [0.0] * (len(bad) - 1), bad)
+            with pytest.raises(ValueError, match="replicas"):
+                simulate_pipeline_throughput(cfg)
+
+    def test_window_aligns_to_joint_period(self):
+        """Regression: a replicated stage drains in bursts (8 finishes per
+        wrap), so a measurement window cutting the joint period mid-wrap
+        biased the rate by ~3% at n_requests=34; the window must start
+        after every replica set wrapped twice and cover whole periods."""
+        from repro.serving.engine import simulate_pipeline_throughput
+        cfg = self._cfg([8.0, 0.5], [0.5], [8, 1])
+        pred = cfg.throughput_rps
+        assert pred == pytest.approx(1.0)
+        for n in (2, 34, 256):
+            sim = simulate_pipeline_throughput(cfg, n_requests=n)
+            assert sim == pytest.approx(pred, rel=1e-9), n
+
+    def test_mixed_replica_counts_measure_exact_rate(self):
+        from repro.serving.engine import simulate_pipeline_throughput
+        cfg = self._cfg([3.0, 8.0, 0.25], [0.125, 0.125], [3, 8, 1])
+        # bottleneck = max(3/3, 8/8, hops, 0.25) = 1.0
+        sim = simulate_pipeline_throughput(cfg, n_requests=50)
+        assert sim == pytest.approx(cfg.throughput_rps, rel=1e-9)
