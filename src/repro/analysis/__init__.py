@@ -1,0 +1,26 @@
+"""scission-lint: static analysis for kernels, plans, and graphs.
+
+Three analyzers over one shared :class:`Diagnostic` type:
+
+* :mod:`repro.analysis.kernel_vmem` (SCN2xx) — static VMEM footprints of
+  Pallas kernel candidates; feeds the autotuner's pre-timing pruning.
+* :mod:`repro.analysis.plan_lint` (SCN1xx) — pre-solve query/constraint
+  linting plus the exact joint-satisfiability backstop; feeds
+  ``QueryResult.diagnostics``.
+* :mod:`repro.analysis.graph_lint` (SCN3xx) — LayerGraph IR
+  well-formedness; feeds ``LayerGraph.validate``.
+
+Only the diagnostics vocabulary is exported eagerly — the analyzers (and
+the ``python -m repro.analysis`` CLI) import their heavyweight
+dependencies lazily so ``repro.core`` modules can depend on this package
+without cycles.
+"""
+
+from .diagnostics import (CODES, Diagnostic, ERROR, INFO, WARNING, dedupe,
+                          errors, has_errors, render_report,
+                          sort_by_severity)
+
+__all__ = [
+    "CODES", "Diagnostic", "ERROR", "INFO", "WARNING", "dedupe", "errors",
+    "has_errors", "render_report", "sort_by_severity",
+]

@@ -1,0 +1,193 @@
+"""``scission-lint`` — the static-analysis CLI.
+
+Usage (the module is the entry point; ``scission-lint`` is the alias used
+throughout the docs)::
+
+    PYTHONPATH=src python -m repro.analysis [--strict] [--vmem BYTES] \
+        [TARGET ...]
+
+Targets:
+
+* ``kernels`` — run the VMEM footprint analyzer over the default
+  autotuner candidate grids at representative shapes, against ``--vmem``
+  (default: the TPU ~16 MiB/core budget).
+* ``graphs`` — build representative model-zoo graphs and run the graph
+  IR checker with shape-chain verification.
+* ``path/to/plan.json`` — lint a deployment-plan file: structural plan
+  diagnostics plus (when no structural error already explains it) the
+  exact SCN109 joint-satisfiability sweep.
+
+With no targets, ``kernels`` and ``graphs`` both run.  ``--strict`` exits
+non-zero when any error-severity diagnostic was emitted (the CI gate).
+
+Plan-file schema (see ``examples/plans/``)::
+
+    {"model": ..., "n_blocks": N, "source": name, "input_bytes": B,
+     "resources": [{"name", "tier", "speed_factor"?, "vmem_bytes"?}, ...],
+     "block_times": {resource: [seconds per block]},
+     "out_bytes": [bytes per block],
+     "links": [{"src", "dst", "latency_s", "bandwidth", "symmetric"?}],
+     "query": {"top_n"?, "batch_size"?, "must_use"?, "exclude"?, "pin"?,
+               "max_resource_time"?, "min_blocks_on"?, "max_link_bytes"?,
+               "pipelines"?}}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+
+from .diagnostics import Diagnostic, ERROR, errors, render_report
+from .kernel_vmem import TPU_VMEM_BYTES, lint_candidates
+
+
+@dataclass(frozen=True)
+class _Spec:
+    """Shape/dtype carrier for the footprint analyzer (keeps the kernel
+    target jax-free until the candidate grids themselves are imported)."""
+
+    shape: tuple
+    dtype: str = "float32"
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+
+# Representative shapes for the ``kernels`` target: one decode step of a
+# mid-sized LM and a prefill-length attention/SSD layer.
+_KERNEL_SHAPES: dict[str, tuple[tuple, dict]] = {
+    "flash_attention": ((_Spec((1, 1024, 8, 64)),), {}),
+    "decode_attention": ((_Spec((1, 8, 64)),),
+                         {"cache_len": 4096, "kv_heads": 8}),
+    "ssd_scan": ((_Spec((1, 1024, 4, 64)),), {"state_dim": 64}),
+}
+
+
+def _lint_kernels(vmem_limit: float) -> list[Diagnostic]:
+    from repro.kernels.substrate import DEFAULT_CANDIDATES
+
+    diags: list[Diagnostic] = []
+    for kernel, candidates in sorted(DEFAULT_CANDIDATES.items()):
+        args, options = _KERNEL_SHAPES.get(kernel, ((), {}))
+        kept, pruned, kdiags = lint_candidates(
+            kernel, candidates, args, vmem_limit=vmem_limit,
+            options=options, subject=kernel)
+        diags.extend(kdiags)
+        print(f"  {kernel}: {len(kept)} kept / {len(pruned)} pruned "
+              f"of {len(candidates)} candidates")
+    return diags
+
+
+def _lint_graphs() -> list[Diagnostic]:
+    from .graph_lint import lint_graph
+    from repro.models import cnn_zoo
+
+    diags: list[Diagnostic] = []
+    for builder in (cnn_zoo.mobilenetv2, cnn_zoo.resnet50):
+        g = builder()
+        gdiags = lint_graph(g, check_shapes=True)
+        diags.extend(gdiags)
+        print(f"  {g.name}: {len(g.nodes)} nodes, "
+              f"{len(gdiags)} diagnostics")
+    return diags
+
+
+def _load_plan(path: str) -> list[Diagnostic]:
+    from repro.core.bench import BenchmarkDB, BlockBenchmark
+    from repro.core.network import Link, NetworkModel
+    from repro.core.partition import CostModel
+    from repro.core.query import Query
+    from repro.core.resources import CLOUD_VM, Resource
+
+    from .plan_lint import explain_empty, lint_plan
+
+    with open(path) as f:
+        plan = json.load(f)
+
+    resources = [
+        Resource(r["name"], r["tier"], CLOUD_VM,
+                 speed_factor=float(r.get("speed_factor", 1.0)),
+                 vmem_bytes=r.get("vmem_bytes"))
+        for r in plan["resources"]]
+    n_blocks = int(plan["n_blocks"])
+    out_bytes = [int(b) for b in plan["out_bytes"]]
+    db = BenchmarkDB(model=plan.get("model", path), n_blocks=n_blocks)
+    for name, times in plan["block_times"].items():
+        db.records[name] = [
+            BlockBenchmark(block=i, resource=name, mean_time_s=float(t),
+                           std_time_s=0.0, output_bytes=out_bytes[i], runs=1)
+            for i, t in enumerate(times)]
+    net = NetworkModel()
+    for ln in plan.get("links", ()):
+        net.connect(ln["src"], ln["dst"],
+                    Link(ln.get("name", f"{ln['src']}-{ln['dst']}"),
+                         float(ln["latency_s"]), float(ln["bandwidth"])),
+                    symmetric=bool(ln.get("symmetric", True)))
+
+    q = dict(plan.get("query", {}))
+    query = Query(
+        top_n=int(q.get("top_n", 3)),
+        batch_size=int(q.get("batch_size", 1)),
+        must_use=tuple(q.get("must_use", ())),
+        exclude=tuple(q.get("exclude", ())),
+        pin={int(k): v for k, v in q.get("pin", {}).items()},
+        max_link_bytes={(a, b): float(v)
+                        for a, b, v in q.get("max_link_bytes", ())},
+        max_resource_time={k: float(v)
+                           for k, v in q.get("max_resource_time", {}).items()},
+        min_blocks_on={k: int(v)
+                       for k, v in q.get("min_blocks_on", {}).items()},
+        pipelines=q.get("pipelines"))
+
+    source = plan["source"]
+    diags = lint_plan(query, resources, net, db, source=source,
+                      batches=[query.batch_size])
+    if not errors(diags):
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source=source,
+                         input_bytes=float(plan["input_bytes"]),
+                         batch_size=query.batch_size)
+        diags.extend(explain_empty(query, query.constraints(), [cost],
+                                   prior=diags))
+    return diags
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="scission-lint",
+        description="Static analysis for Scission kernels, plans and graphs")
+    parser.add_argument("targets", nargs="*",
+                        help="'kernels', 'graphs', and/or plan JSON paths "
+                             "(default: kernels graphs)")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit 1 when any error diagnostic is emitted")
+    parser.add_argument("--vmem", type=float, default=float(TPU_VMEM_BYTES),
+                        help="VMEM budget in bytes for the kernels target "
+                             "(default: %(default).0f)")
+    args = parser.parse_args(argv)
+    targets = args.targets or ["kernels", "graphs"]
+
+    n_errors = 0
+    for target in targets:
+        print(f"== scission-lint: {target} ==")
+        if target == "kernels":
+            diags = _lint_kernels(args.vmem)
+        elif target == "graphs":
+            diags = _lint_graphs()
+        else:
+            diags = _load_plan(target)
+        report = render_report(diags)
+        if report:
+            print(report)
+        n_errors += len(errors(diags))
+    print(f"scission-lint: {len(targets)} target(s), {n_errors} error(s)")
+    if args.strict and n_errors:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":           # pragma: no cover - exercised via CI
+    sys.exit(main())

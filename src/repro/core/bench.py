@@ -137,17 +137,50 @@ class BenchmarkDB:
     model: str
     n_blocks: int
     records: dict[str, list[BlockBenchmark]] = field(default_factory=dict)
+    # batch-clamp diagnostics (SCN111) accumulated by time() queries outside
+    # the measured profile range, drained by the query engine onto
+    # QueryResult.diagnostics; bookkeeping only, not part of the DB's value
+    _pending_diags: list = field(default_factory=list, repr=False,
+                                 compare=False)
+    _noted_clamps: set = field(default_factory=set, repr=False, compare=False)
 
     def time(self, resource: str, block: int, batch: int = 1) -> float:
         """Mean seconds per batch for ``block`` on ``resource`` at ``batch``.
 
         Unmeasured batch sizes interpolate log-linearly between measured
-        profile points and clamp at the measured extremes.
+        profile points and clamp at the measured extremes — and a clamped
+        query is *recorded* (SCN111 warning, drained via
+        :meth:`drain_diagnostics`) rather than silently answered with the
+        nearest measured batch's time.
         """
         rec = self.records[resource][block]
         if batch == 1:
             return rec.mean_time_s
+        lo, hi = min(rec.batch_profile), max(rec.batch_profile)
+        if not lo <= batch <= hi:
+            self._note_clamp(resource, batch, lo, hi)
         return rec.time_at(batch)
+
+    def _note_clamp(self, resource: str, batch: int, lo: int, hi: int):
+        if (resource, batch) in self._noted_clamps:
+            return
+        self._noted_clamps.add((resource, batch))
+        from ..analysis.diagnostics import Diagnostic, WARNING
+        self._pending_diags.append(Diagnostic(
+            "SCN111", WARNING,
+            f"batch size {batch} on {resource!r} is outside the measured "
+            f"profile range [{lo}, {hi}]; times were clamped to the "
+            f"nearest measured batch", subject=resource,
+            hint=f"re-run benchmark_model(batch_sizes=(..., {batch})) to "
+                 "measure it"))
+
+    def drain_diagnostics(self) -> list:
+        """Hand off (and clear) the accumulated clamp diagnostics — the
+        query engine attaches them to the ``QueryResult`` whose pricing
+        triggered them."""
+        out, self._pending_diags = self._pending_diags, []
+        self._noted_clamps.clear()
+        return out
 
     def output_bytes(self, block: int, batch: int = 1) -> int:
         if not self.records:
@@ -376,6 +409,10 @@ def benchmark_model(graph: LayerGraph, resources: list[Resource],
         raise ValueError(f"batch sizes must be >= 1, got {batch_sizes}")
     db = BenchmarkDB(model=graph.name, n_blocks=len(blocks))
     tuner = getattr(provider, "tuner", None)
+    if tuner is not None and hasattr(tuner, "register_resources"):
+        # pick up per-resource VMEM budgets so the sweep statically prunes
+        # candidates that cannot fit (repro.analysis.kernel_vmem)
+        tuner.register_resources(resources)
     for res in resources:
         recs = []
         for blk in blocks:

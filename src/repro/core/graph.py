@@ -121,18 +121,19 @@ class LayerGraph:
                 out[p].append(i)
         return out
 
-    def validate(self) -> None:
-        if not self.nodes:
-            raise ValueError("empty graph")
-        succs = self.succs
-        sinks = [i for i, s in enumerate(succs) if not s]
-        if sinks != [len(self.nodes) - 1]:
-            raise ValueError(f"graph {self.name!r} must have exactly the last "
-                             f"node as its only sink; sinks={sinks}")
-        for i in range(1, len(self.nodes)):
-            if not self.preds[i]:
-                raise ValueError(f"node {i} ({self.nodes[i].name!r}) is an "
-                                 "orphan source; only node 0 may be a source")
+    def validate(self, check_shapes: bool = False) -> None:
+        """Run the graph IR checker (repro.analysis.graph_lint) and raise
+        :class:`~repro.analysis.graph_lint.GraphLintError` — a
+        ``ValueError`` carrying every named-node diagnostic, not just the
+        first — when the graph is malformed.  ``check_shapes=True`` also
+        verifies each traced node's declared ``out_spec`` against the spec
+        recomputed from its predecessors (SCN306)."""
+        from ..analysis.diagnostics import errors
+        from ..analysis.graph_lint import GraphLintError, lint_graph
+
+        bad = errors(lint_graph(self, check_shapes=check_shapes))
+        if bad:
+            raise GraphLintError(f"graph {self.name!r} is malformed", bad)
 
     # -- shape tracing -----------------------------------------------------
     def trace(self) -> None:
@@ -281,8 +282,10 @@ def fuse_blocks(graph: LayerGraph) -> list[Block]:
     positions, ``len(blocks) - 1``, equals the paper's "partition points"
     column in Table I.
     """
-    if graph.nodes and graph.nodes[-1].out_spec is None:
-        graph.trace()
+    if not graph.nodes or graph.nodes[-1].out_spec is None:
+        graph.trace()               # trace() validates first
+    else:
+        graph.validate()            # already traced: still well-formedness-check
     points = graph.partition_points()
     blocks: list[Block] = []
     start = 0

@@ -58,6 +58,16 @@ class NetworkModel:
             self._links[(dst, src)] = link
         return self
 
+    def links(self) -> dict[tuple[str, str], Link]:
+        """The explicitly-connected directed pairs (a copy).
+
+        Introspection view for the plan linter: ``link()`` silently falls
+        back to the default link for any pair not listed here, so a
+        ``connect(symmetric=False)`` whose reverse direction a plan relies
+        on can be flagged (SCN110) instead of mispriced invisibly.
+        """
+        return dict(self._links)
+
     def link(self, src: str, dst: str) -> Link:
         hit = self._links.get((src, dst))
         if hit is not None:

@@ -138,6 +138,12 @@ class QueryResult:
     # across all states, and how many were pruned
     labels_kept: int = 0
     labels_pruned: int = 0
+    # scission-lint findings for this query (repro.analysis.plan_lint):
+    # structural constraint problems, batch-clamp warnings drained from the
+    # DB, and — for an empty result no structural error explains — the
+    # exact SCN109 joint-unsatisfiability verdict.  An empty ``configs``
+    # therefore always arrives with a machine-checkable explanation.
+    diagnostics: list = field(default_factory=list)
 
     @property
     def best(self) -> PartitionConfig:
@@ -239,9 +245,12 @@ class QueryEngine:
         else:
             configs = self._run_lattice(query, cons, cost)
             strategy = "lattice"
-        return QueryResult(configs=configs,
-                           query_time_s=time.perf_counter() - t0,
-                           strategy=strategy)
+        result = QueryResult(configs=configs,
+                             query_time_s=time.perf_counter() - t0,
+                             strategy=strategy)
+        self._attach_diagnostics(result, query, cons, [cost],
+                                 batches=[query.batch_size])
+        return result
 
     def frontier(self, query: Query | None = None,
                  strategy: str | None = None) -> QueryResult:
@@ -285,9 +294,12 @@ class QueryEngine:
                 if self._search_space(query) <= EXHAUSTIVE_LIMIT else "lattice"
         kept = pruned = 0
         cands: list[PartitionConfig] = []
-        for batch in self._frontier_batches(query):
+        batches = self._frontier_batches(query)
+        costs: list[CostModel] = []
+        for batch in batches:
             q = replace(query, batch_size=batch)
             cost = self._cost_for(q)
+            costs.append(cost)
             if strategy == "exhaustive":
                 cands.extend(self._filtered_exhaustive(q, cons, cost))
             else:
@@ -298,10 +310,38 @@ class QueryEngine:
         front = [trim_replicas(c) for c in pareto_frontier(_dedupe(cands))]
         front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
                                   c.transfer_bytes))
-        return QueryResult(configs=front,
-                           query_time_s=time.perf_counter() - t0,
-                           strategy=strategy,
-                           labels_kept=kept, labels_pruned=pruned)
+        result = QueryResult(configs=front,
+                             query_time_s=time.perf_counter() - t0,
+                             strategy=strategy,
+                             labels_kept=kept, labels_pruned=pruned)
+        # the frontier ignores top_n, and a timing-dependent error must
+        # hold at every swept batch before it explains an empty frontier
+        self._attach_diagnostics(result, query, cons, costs,
+                                 batches=batches, check_top_n=False)
+        return result
+
+    def _attach_diagnostics(self, result: QueryResult, query: Query,
+                            cons: Constraints, costs: list[CostModel],
+                            batches: list[int],
+                            check_top_n: bool = True) -> None:
+        """Run the plan linter (repro.analysis) over the just-answered query
+        and attach its findings — plus any batch-clamp warnings the pricing
+        drained out of the DB.  When the result is empty and no structural
+        error explains it, the exact joint-satisfiability sweep (SCN109)
+        supplies the explanation.  Runs *after* the solve so the paper's
+        <50 ms ``query_time_s`` metric stays a pure solve time.
+        """
+        from ..analysis.diagnostics import dedupe
+        from ..analysis.plan_lint import explain_empty, lint_plan
+
+        diags = lint_plan(query, self.resources, self.network, self.db,
+                          source=self.source, batches=batches,
+                          check_top_n=check_top_n)
+        if hasattr(self.db, "drain_diagnostics"):
+            diags.extend(self.db.drain_diagnostics())
+        if not result.configs:
+            diags.extend(explain_empty(query, cons, costs, prior=diags))
+        result.diagnostics = dedupe(diags)
 
     def _lattice_frontier(self, query: Query, cons: Constraints,
                           cost: CostModel

@@ -50,6 +50,11 @@ class Resource:
     speed_factor: float = 1.0
     # Tier ordering for pipeline construction: data flows device -> edge -> cloud.
     order: int = field(default=0)
+    # Per-core VMEM capacity in bytes (None == unconstrained).  Consumed by
+    # the kernel memory analyzer (repro.analysis.kernel_vmem): the autotuner
+    # statically prunes block-size candidates whose footprint exceeds it
+    # before spending compile/measure time on them.
+    vmem_bytes: float | None = None
 
     def __post_init__(self):
         order = {"device": 0, "edge": 1, "cloud": 2}[self.tier]

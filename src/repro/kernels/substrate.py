@@ -193,6 +193,10 @@ class TuneRecord:
     default_params: dict[str, int]
     default_time_s: float               # NaN when the default never compiled
     trials: dict[str, float] = field(default_factory=dict)  # json(params) -> s
+    # candidates statically pruned by the VMEM analyzer before timing:
+    # json(params) -> computed footprint in bytes (empty when unconstrained)
+    pruned: dict[str, float] = field(default_factory=dict)
+    vmem_limit: float | None = None   # the budget the sweep ran under
 
     @property
     def changed_default(self) -> bool:
@@ -231,7 +235,8 @@ class KernelAutotuner:
 
     def __init__(self, candidates: dict[str, list[dict[str, int]]] | None = None,
                  runs: int = 2,
-                 measure: Callable[[Callable, tuple], float] | None = None):
+                 measure: Callable[[Callable, tuple], float] | None = None,
+                 vmem_limits: dict[str, float] | None = None):
         self.candidates = dict(DEFAULT_CANDIDATES)
         if candidates:
             self.candidates.update(candidates)
@@ -242,6 +247,18 @@ class KernelAutotuner:
         # resource (speed factors scale uniformly), so trial tables are
         # shared across resources; each resource still gets its own record.
         self._trials: dict[tuple[str, str], dict[str, float]] = {}
+        # Per-resource VMEM budgets in bytes: candidates whose static
+        # footprint (repro.analysis.kernel_vmem) exceeds the tuned
+        # resource's budget are pruned before timing.
+        self.vmem_limits: dict[str, float] = dict(vmem_limits or {})
+
+    def register_resources(self, resources) -> None:
+        """Adopt ``Resource.vmem_bytes`` budgets from a testbed (called by
+        ``benchmark_model`` so the sweep and the fleet stay in sync)."""
+        for r in resources:
+            budget = getattr(r, "vmem_bytes", None)
+            if budget is not None:
+                self.vmem_limits[r.name] = float(budget)
 
     # -- measurement --------------------------------------------------------
     def _time_candidate(self, fn: Callable, args: tuple) -> float:
@@ -262,15 +279,24 @@ class KernelAutotuner:
              args: tuple, *, resource: str = "host",
              defaults: dict[str, int] | None = None,
              shape_key: str | None = None,
-             config_key: str = "") -> TuneRecord:
+             config_key: str = "",
+             options: dict | None = None) -> TuneRecord:
         """Sweep candidates for ``kernel`` at the shapes of ``args``.
 
         ``factory(params)`` returns the callable to measure.  ``config_key``
         distinguishes factories whose behaviour differs beyond the argument
-        shapes (causal/window/softcap, closed-over cache sizes, ...).  The
+        shapes (causal/window/softcap, closed-over cache sizes, ...);
+        ``options`` are the node's ``kernel_options``, consumed by the
+        static VMEM analyzer for dimensions the args don't expose.  The
         winning record is cached per (kernel, shape+config, resource), and
         the underlying trial table is shared across resources — mirroring
         ``BenchmarkDB``'s benchmark-once/query-many contract.
+
+        When the tuned resource has a VMEM budget (``self.vmem_limits``),
+        candidates whose static footprint exceeds it are pruned *before*
+        timing (``TuneRecord.pruned`` records them) and the winner is the
+        fastest *admissible* candidate — so a shared trial table measured
+        under one budget serves stricter budgets without re-timing.
         """
         defaults = dict(defaults or DEFAULT_PARAMS.get(kernel, {}))
         shape_key = shape_key or _shape_key(
@@ -287,29 +313,52 @@ class KernelAutotuner:
         if not candidates:
             candidates = [defaults]
 
-        trials = self._trials.get((kernel, shape_key))
-        if trials is None:
-            trials = {}
-            for params in candidates:
-                try:
-                    t = self._time_candidate(factory(params), args)
-                except Exception:   # unsupported block shape on this version
-                    continue
-                trials[json.dumps(params, sort_keys=True)] = t
-            if not trials:
+        budget = self.vmem_limits.get(resource)
+        pruned: dict[str, float] = {}
+        kept = candidates
+        if budget is not None:
+            from ..analysis.kernel_vmem import lint_candidates
+            kept, pruned_b, _ = lint_candidates(
+                kernel, candidates, args, vmem_limit=budget,
+                options=options, subject=f"{kernel}@{resource}")
+            pruned = {k: float(v) for k, v in pruned_b.items()}
+            if not kept:
+                sizes = "; ".join(f"{k} -> {v / 2**20:.2f}MiB"
+                                  for k, v in sorted(pruned.items()))
                 raise RuntimeError(
-                    f"autotune: every candidate failed for {kernel} "
-                    f"{shape_key}")
-            self._trials[(kernel, shape_key)] = trials
+                    f"autotune: every candidate of {kernel} {shape_key} "
+                    f"exceeds the {budget / 2**20:.2f}MiB VMEM budget of "
+                    f"resource {resource!r}: {sizes}")
 
-        best_key = min(trials, key=trials.get)
+        trials = self._trials.setdefault((kernel, shape_key), {})
+        failures: dict[str, str] = {}
+        for params in kept:
+            pkey = json.dumps(params, sort_keys=True)
+            if pkey in trials:
+                continue
+            try:
+                trials[pkey] = self._time_candidate(factory(params), args)
+            except Exception as e:  # unsupported block shape on this version
+                failures[pkey] = f"{type(e).__name__}: {e}"
+
+        kept_keys = {json.dumps(p, sort_keys=True) for p in kept}
+        admissible = {k: t for k, t in trials.items() if k in kept_keys}
+        if not admissible:
+            detail = "; ".join(f"{k} -> {err}"
+                               for k, err in sorted(failures.items())) \
+                or "no candidate produced a measurement"
+            raise RuntimeError(
+                f"autotune: every candidate failed for {kernel} "
+                f"{shape_key}: {detail}")
+
+        best_key = min(admissible, key=admissible.get)
         best = json.loads(best_key)
         dkey = json.dumps(defaults, sort_keys=True)
         rec = TuneRecord(kernel=kernel, shape_key=shape_key, resource=resource,
-                         params=best, time_s=trials[best_key],
+                         params=best, time_s=admissible[best_key],
                          default_params=defaults,
-                         default_time_s=trials.get(dkey, float("nan")),
-                         trials=trials)
+                         default_time_s=admissible.get(dkey, float("nan")),
+                         trials=admissible, pruned=pruned, vmem_limit=budget)
         self.records[key] = rec
         return rec
 
@@ -339,7 +388,8 @@ class KernelAutotuner:
                         or DEFAULT_PARAMS.get(kernel),
                         config_key=json.dumps(options, sort_keys=True,
                                               default=str)
-                        if options else "")
+                        if options else "",
+                        options=options)
         node.kernel_params = dict(rec.params)
         node.apply = factory(rec.params)
         return rec

@@ -1,0 +1,549 @@
+"""scission-lint: the static-analysis layer (repro.analysis).
+
+Covers the three analyzers (kernel VMEM / plan lint / graph IR), their
+engine wiring (autotuner pruning, ``QueryResult.diagnostics``,
+``GraphLintError``), the satellite fixes (failure maps, batch-clamp
+surfacing, one-way links), and the acceptance property: whenever a
+solve/frontier returns ``[]`` under generated constraints, the attached
+diagnostics contain >= 1 error-severity code explaining the infeasibility
+— and conversely, a non-empty result never carries an error (the linter
+is *sound* on the generated constraint families).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (CODES, Diagnostic, ERROR, INFO, WARNING, dedupe,
+                            errors, has_errors)
+from repro.analysis.graph_lint import (GraphLintError, lint_db_against_graph,
+                                       lint_graph)
+from repro.analysis.kernel_vmem import (kernel_footprint, kernel_vmem_bytes,
+                                        lint_candidates)
+from repro.analysis.plan_lint import (explain_empty, feasible_exists,
+                                      lint_plan)
+from repro.core import (AnalyticProvider, Link, NetworkModel, Query,
+                        QueryEngine, Resource, benchmark_model, fuse_blocks,
+                        linear_graph)
+from repro.core.bench import BenchmarkDB, BlockBenchmark
+from repro.core.graph import LayerGraph, LayerNode
+from repro.core.resources import CLOUD_VM, EDGE_BOX_1, RPI4
+from repro.kernels import KernelAutotuner
+
+from test_constraint_exact import _random_engine_and_query
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # degrade to the deterministic tests only
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# the shared Diagnostic type
+# ---------------------------------------------------------------------------
+
+class TestDiagnostic:
+    def test_severity_and_code_validation(self):
+        with pytest.raises(ValueError, match="severity"):
+            Diagnostic("SCN101", "fatal", "x")
+        for bad in ("SCN1", "ABC101", "SCN1x1", "scn101"):
+            with pytest.raises(ValueError, match="code"):
+                Diagnostic(bad, ERROR, "x")
+
+    def test_render_and_helpers(self):
+        d = Diagnostic("SCN103", ERROR, "floor too high", subject="cloud",
+                       hint="lower it")
+        assert "SCN103" in d.render() and "[cloud]" in d.render() \
+            and "lower it" in d.render()
+        w = Diagnostic("SCN111", WARNING, "clamped")
+        assert errors([d, w]) == [d]
+        assert has_errors([w]) is False and has_errors([d, w]) is True
+        assert dedupe([d, d, w]) == [d, w]
+
+    def test_all_emitted_codes_are_documented(self):
+        assert all(len(c) == 6 and c.startswith("SCN") for c in CODES)
+        # one block per analyzer family
+        assert {c[3] for c in CODES} == {"1", "2", "3"}
+
+
+# ---------------------------------------------------------------------------
+# kernel memory analyzer (SCN2xx)
+# ---------------------------------------------------------------------------
+
+class TestKernelVmem:
+    def test_flash_footprint_hand_computed(self):
+        # q (1, 192, 2, 32) f32, blocks (64, 64):
+        #   q/k/v/o blocks are (1, 64, 1, 32) -> 8192 B each
+        #   in  = 2 * 3 * 8192 = 49152 (double-buffered)
+        #   out = 2 * 8192     = 16384
+        #   scratch = 2*(64*4) + 64*32*4 = 8704
+        q = np.zeros((1, 192, 2, 32), np.float32)
+        fp = kernel_footprint("flash_attention",
+                              {"block_q": 64, "block_k": 64}, [q])
+        assert fp.in_bytes == 49152
+        assert fp.out_bytes == 16384
+        assert fp.scratch_bytes == 8704
+        assert fp.vmem_bytes == 74240
+
+    def test_flash_blocks_clamp_to_sequence(self):
+        q = np.zeros((1, 32, 2, 16), np.float32)
+        fp = kernel_footprint("flash_attention",
+                              {"block_q": 256, "block_k": 256}, [q])
+        assert fp.blocks["q"] == (1, 32, 1, 16)
+        assert fp.blocks["k"] == (1, 32, 1, 16)
+
+    def test_ssd_footprint_hand_computed(self):
+        # x (1, 64, 1, 16) f32, chunk 32, N=8 (via options):
+        #   x (1,32,1,16)=2048, log_a (1,32,1)=128, b=c=(1,32,1,8)=1024,
+        #   y 2048, final (1,1,8,16)=512, scratch N*P*4=512
+        x = np.zeros((1, 64, 1, 16), np.float32)
+        fp = kernel_footprint("ssd_scan", {"chunk": 32}, [x],
+                              options={"state_dim": 8})
+        assert fp.in_bytes == 2 * (2048 + 128 + 1024 + 1024)
+        assert fp.out_bytes == 2 * (2048 + 512)
+        assert fp.scratch_bytes == 512
+        assert fp.vmem_bytes == 14080
+
+    def test_decode_needs_cache_length(self):
+        q = np.zeros((1, 8, 64), np.float32)
+        with pytest.raises(ValueError, match="cache"):
+            kernel_footprint("decode_attention", {"block_k": 256}, [q])
+        small = kernel_vmem_bytes("decode_attention", {"block_k": 128}, [q],
+                                  options={"cache_len": 4096, "kv_heads": 8})
+        large = kernel_vmem_bytes("decode_attention", {"block_k": 512}, [q],
+                                  options={"cache_len": 4096, "kv_heads": 8})
+        assert small < large
+
+    def test_unknown_kernel_returns_none(self):
+        assert kernel_footprint("nope", {}, []) is None
+
+    def test_lint_candidates_split(self):
+        q = np.zeros((1, 192, 2, 32), np.float32)
+        cands = [{"block_q": 64, "block_k": 64},
+                 {"block_q": 256, "block_k": 256}]
+        small_fp = kernel_vmem_bytes("flash_attention", cands[0], [q])
+        kept, pruned, diags = lint_candidates(
+            "flash_attention", cands, [q], vmem_limit=small_fp)
+        assert kept == [cands[0]]
+        assert list(pruned) == [json.dumps(cands[1], sort_keys=True)]
+        assert [d.code for d in diags] == ["SCN201"]
+        assert diags[0].severity == INFO
+
+    def test_lint_candidates_all_pruned_is_error(self):
+        q = np.zeros((1, 192, 2, 32), np.float32)
+        kept, pruned, diags = lint_candidates(
+            "flash_attention", [{"block_q": 64, "block_k": 64}], [q],
+            vmem_limit=16)
+        assert kept == [] and len(pruned) == 1
+        assert any(d.code == "SCN202" and d.is_error for d in diags)
+
+    def test_lint_candidates_unlimited_and_unknown(self):
+        cands = [{"block_q": 64, "block_k": 64}]
+        kept, pruned, diags = lint_candidates(
+            "flash_attention", cands, [], vmem_limit=None)
+        assert kept == cands and not pruned and not diags
+        kept, pruned, diags = lint_candidates("mystery", [{"p": 1}], [],
+                                              vmem_limit=1)
+        assert kept == [{"p": 1}]
+        assert [d.code for d in diags] == ["SCN203"]
+
+
+# ---------------------------------------------------------------------------
+# autotuner integration: pruning before timing, failure maps
+# ---------------------------------------------------------------------------
+
+def _tagged_factory(params):
+    fn = lambda x: x                                   # noqa: E731
+    fn.params = dict(params)
+    return fn
+
+
+class TestAutotunerVmem:
+    CANDS = {"ssd_scan": [{"chunk": c} for c in (32, 64, 128)]}
+    ARGS = (np.zeros((1, 192, 1, 32), np.float32),)
+    OPTS = {"state_dim": 64}
+
+    def _tuner(self, measured, **kw):
+        def measure(fn, args):
+            measured.append(fn.params)
+            return 1.0 / fn.params["chunk"]     # largest chunk wins
+        return KernelAutotuner(candidates=self.CANDS, measure=measure, **kw)
+
+    def test_pruned_candidates_are_never_measured(self):
+        budget = kernel_vmem_bytes("ssd_scan", {"chunk": 64}, self.ARGS,
+                                   options=self.OPTS)
+        measured = []
+        tuner = self._tuner(measured, vmem_limits={"edge": float(budget)})
+        rec = tuner.tune("ssd_scan", _tagged_factory, self.ARGS,
+                         resource="edge", options=self.OPTS)
+        assert {p["chunk"] for p in measured} == {32, 64}
+        assert rec.params == {"chunk": 64}      # fastest *admissible*
+        assert list(rec.pruned) == [json.dumps({"chunk": 128})]
+        assert rec.vmem_limit == float(budget)
+
+    def test_constrained_winner_reuses_unconstrained_trials_exactly(self):
+        budget = kernel_vmem_bytes("ssd_scan", {"chunk": 64}, self.ARGS,
+                                   options=self.OPTS)
+        measured = []
+        tuner = self._tuner(measured)
+        free = tuner.tune("ssd_scan", _tagged_factory, self.ARGS,
+                          resource="cloud", options=self.OPTS)
+        n_measured = len(measured)
+        assert free.params == {"chunk": 128} and not free.pruned
+        tuner.vmem_limits["edge"] = float(budget)
+        tight = tuner.tune("ssd_scan", _tagged_factory, self.ARGS,
+                           resource="edge", options=self.OPTS)
+        # nothing re-timed: the admissible winner is selected from the
+        # cached trial table, so its time is bit-identical to that sweep
+        assert len(measured) == n_measured
+        assert tight.params == {"chunk": 64}
+        assert tight.time_s == free.trials[json.dumps({"chunk": 64})]
+
+    def test_all_pruned_raises_with_footprints(self):
+        tuner = self._tuner([], vmem_limits={"edge": 64.0})
+        with pytest.raises(RuntimeError, match="VMEM budget"):
+            tuner.tune("ssd_scan", _tagged_factory, self.ARGS,
+                       resource="edge", options=self.OPTS)
+
+    def test_every_candidate_failed_reports_per_candidate_errors(self):
+        def measure(fn, args):
+            raise ValueError(f"boom chunk={fn.params['chunk']}")
+        tuner = KernelAutotuner(candidates=self.CANDS, measure=measure)
+        with pytest.raises(RuntimeError) as ei:
+            tuner.tune("ssd_scan", _tagged_factory, self.ARGS,
+                       resource="host", options=self.OPTS)
+        msg = str(ei.value)
+        for chunk in (32, 64, 128):
+            assert f"boom chunk={chunk}" in msg
+        assert "ValueError" in msg
+
+    def test_register_resources_adopts_vmem_budgets(self):
+        tuner = KernelAutotuner(candidates=self.CANDS)
+        tuner.register_resources([
+            Resource("edge", "edge", EDGE_BOX_1, vmem_bytes=12345.0),
+            Resource("cloud", "cloud", CLOUD_VM)])
+        assert tuner.vmem_limits == {"edge": 12345.0}
+
+    def test_tune_record_json_roundtrip_keeps_pruned(self):
+        budget = kernel_vmem_bytes("ssd_scan", {"chunk": 64}, self.ARGS,
+                                   options=self.OPTS)
+        tuner = self._tuner([], vmem_limits={"edge": float(budget)})
+        tuner.tune("ssd_scan", _tagged_factory, self.ARGS,
+                   resource="edge", options=self.OPTS)
+        back = KernelAutotuner.from_json(tuner.to_json())
+        rec = next(iter(back.records.values()))
+        assert rec.pruned and rec.vmem_limit == float(budget)
+
+
+# ---------------------------------------------------------------------------
+# plan linter (SCN1xx)
+# ---------------------------------------------------------------------------
+
+def _small_engine(n_blocks=4):
+    """Deterministic 3-resource space with uniform dyadic times."""
+    res = [Resource("device0", "device", RPI4),
+           Resource("edge0", "edge", EDGE_BOX_1),
+           Resource("cloud0", "cloud", CLOUD_VM)]
+    db = BenchmarkDB(model="lint", n_blocks=n_blocks)
+    for i, r in enumerate(res):
+        t = [1 / (1 << (i + 2))] * n_blocks     # faster per tier
+        db.records[r.name] = [
+            BlockBenchmark(block=b, resource=r.name, mean_time_s=t[b],
+                           std_time_s=0.0, output_bytes=1 << 10, runs=1)
+            for b in range(n_blocks)]
+    net = NetworkModel(default=Link("d", 1 / (1 << 10), float(1 << 20)))
+    return QueryEngine(db, res, net, source="device0",
+                       input_bytes=float(1 << 10))
+
+
+def _codes(result):
+    return {d.code for d in result.diagnostics}
+
+
+class TestPlanLint:
+    def test_feasible_query_is_clean(self):
+        r = _small_engine().run(Query())
+        assert r.configs and r.diagnostics == []
+
+    def test_scn101_contradiction(self):
+        r = _small_engine().run(Query(must_use=("cloud0",),
+                                      exclude=("cloud0",)))
+        assert not r.configs and "SCN101" in _codes(r)
+
+    def test_scn102_unknown_demanded_vs_excluded(self):
+        eng = _small_engine()
+        r = eng.run(Query(must_use=("ghost",)))
+        d = next(d for d in r.diagnostics if d.code == "SCN102")
+        assert d.is_error and not r.configs
+        # unknown names in exclude merely warn — the query still solves
+        r2 = eng.run(Query(exclude=("ghost",)))
+        d2 = next(d for d in r2.diagnostics if d.code == "SCN102")
+        assert d2.severity == WARNING and r2.configs
+
+    def test_scn103_floor_exceeds_blocks(self):
+        r = _small_engine(4).run(Query(min_blocks_on={"cloud0": 5}))
+        assert not r.configs and "SCN103" in _codes(r)
+
+    def test_scn104_floors_cannot_fit(self):
+        r = _small_engine(4).run(Query(min_blocks_on={"device0": 3,
+                                                      "cloud0": 2}))
+        assert not r.configs and "SCN104" in _codes(r)
+
+    def test_scn105_cap_below_single_block(self):
+        eng = _small_engine()
+        # cloud0 block time is 1/16; demanded -> error
+        r = eng.run(Query(must_use=("cloud0",),
+                          max_resource_time={"cloud0": 1 / 32}))
+        d = next(d for d in r.diagnostics if d.code == "SCN105")
+        assert d.is_error and not r.configs
+        # not demanded -> the resource is just unusable: warning
+        r2 = eng.run(Query(max_resource_time={"cloud0": 1 / 32}))
+        d2 = next(d for d in r2.diagnostics if d.code == "SCN105")
+        assert d2.severity == WARNING and r2.configs
+
+    def test_scn106_tier_collision_and_pin_order(self):
+        eng = _small_engine()
+        res = [Resource("device0", "device", RPI4),
+               Resource("edge0", "edge", EDGE_BOX_1),
+               Resource("edge1", "edge", EDGE_BOX_1)]
+        diags = lint_plan(Query(must_use=("edge0",),
+                                min_blocks_on={"edge1": 1}), res)
+        assert any(d.code == "SCN106" and d.is_error for d in diags)
+        # pins against the data-flow direction
+        r = eng.run(Query(pin={0: "cloud0", 3: "device0"}))
+        assert not r.configs and "SCN106" in _codes(r)
+
+    def test_scn107_pinned_hop_without_explicit_link(self):
+        eng = _small_engine()
+        r = eng.run(Query(pin={1: "device0", 2: "cloud0"}))
+        d = next(d for d in r.diagnostics if d.code == "SCN107")
+        assert d.severity == WARNING      # advisory: default link prices it
+        assert "device0" in d.subject and "cloud0" in d.subject
+
+    def test_scn108_pipelines_admit_none(self):
+        eng = _small_engine()
+        r = eng.run(Query(pipelines=(("cloud0", "device0"),)))   # wrong order
+        assert not r.configs and "SCN108" in _codes(r)
+        r2 = eng.run(Query(must_use=("edge0",),
+                           pipelines=(("device0", "cloud0"),)))
+        assert not r2.configs and "SCN108" in _codes(r2)
+
+    def test_scn110_one_way_link_against_flow(self):
+        res = [Resource("device0", "device", RPI4),
+               Resource("cloud0", "cloud", CLOUD_VM)]
+        net = NetworkModel()
+        # explicit link points cloud -> device; the planner-usable
+        # device -> cloud direction silently falls back to the default
+        net.connect("cloud0", "device0", Link("back", 0.01, 1e6),
+                    symmetric=False)
+        diags = lint_plan(Query(), res, net)
+        d = next(d for d in diags if d.code == "SCN110")
+        assert d.severity == WARNING and d.subject == "device0->cloud0"
+        # a symmetric connect is clean
+        net2 = NetworkModel().connect("device0", "cloud0",
+                                      Link("ok", 0.01, 1e6))
+        assert not [d for d in lint_plan(Query(), res, net2)
+                    if d.code == "SCN110"]
+
+    def test_scn112_nonpositive_top_n(self):
+        r = _small_engine().run(Query(top_n=0))
+        assert not r.configs and "SCN112" in _codes(r)
+        # the frontier ignores top_n, so it must not flag it
+        rf = _small_engine().frontier(Query(top_n=0))
+        assert rf.configs and "SCN112" not in _codes(rf)
+
+    def test_scn109_jointly_unsatisfiable_backstop(self):
+        # every itemized check passes — the cap (0.3) is above device0's
+        # single-block time (0.25) so SCN105 stays silent, and the floor
+        # (2 of 4 blocks) fits on its own — but 2 blocks cost 0.5 > 0.3,
+        # so the *combination* is unsatisfiable: only the exact sweep sees it
+        eng = _small_engine(4)
+        q = Query(min_blocks_on={"device0": 2},
+                  max_resource_time={"device0": 0.3})
+        r = eng.run(q)
+        assert not r.configs
+        assert _codes(r) == {"SCN109"}
+
+    def test_feasible_exists_matches_solver(self):
+        eng = _small_engine()
+        q_ok = Query(must_use=("cloud0",))
+        q_bad = Query(must_use=("cloud0",),
+                      max_link_bytes={("device0", "cloud0"): 1.0,
+                                      ("device0", "edge0"): 1.0,
+                                      ("edge0", "cloud0"): 1.0})
+        for q, want in ((q_ok, True), (q_bad, False)):
+            cost = eng._cost_for(q)
+            got = feasible_exists(cost, q.constraints())
+            assert got is (bool(eng.run(q).configs)) is want
+
+    def test_explain_empty_skips_when_prior_error_explains(self):
+        eng = _small_engine()
+        q = Query(min_blocks_on={"cloud0": 99})
+        cost = eng._cost_for(q)
+        prior = [Diagnostic("SCN103", ERROR, "floor")]
+        assert explain_empty(q, q.constraints(), [cost], prior=prior) == []
+
+
+# ---------------------------------------------------------------------------
+# batch-clamp surfacing (SCN111)
+# ---------------------------------------------------------------------------
+
+class TestBatchClampDiagnostic:
+    def _db(self):
+        db = BenchmarkDB(model="clamp", n_blocks=2)
+        db.records["edge0"] = [
+            BlockBenchmark(block=b, resource="edge0", mean_time_s=0.01,
+                           std_time_s=0.0, output_bytes=64, runs=1,
+                           batch_profile={1: (0.01, 64), 4: (0.03, 256)})
+            for b in range(2)]
+        return db
+
+    def test_out_of_range_batch_is_recorded_not_silent(self):
+        db = self._db()
+        t = db.time("edge0", 0, batch=16)        # above the measured range
+        assert t == 0.03                         # still clamps (no change)
+        diags = db.drain_diagnostics()
+        assert [d.code for d in diags] == ["SCN111"]
+        assert diags[0].severity == WARNING and "16" in diags[0].message
+        assert db.drain_diagnostics() == []      # drained
+
+    def test_repeated_clamps_dedupe_and_in_range_is_clean(self):
+        db = self._db()
+        db.time("edge0", 0, batch=16)
+        db.time("edge0", 1, batch=16)            # same (resource, batch)
+        assert len(db.drain_diagnostics()) == 1
+        db.time("edge0", 0, batch=2)             # interpolated, in range
+        db.time("edge0", 0, batch=1)
+        assert db.drain_diagnostics() == []
+
+    def test_pending_clamps_surface_on_query_result(self):
+        eng = _small_engine()
+        eng.db.records["edge0"][0].batch_profile = {1: (0.01, 64)}
+        eng.db.time("edge0", 0, batch=8)         # out-of-range consumer
+        r = eng.run(Query())
+        assert any(d.code == "SCN111" and d.severity == WARNING
+                   for d in r.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# graph IR checker (SCN3xx)
+# ---------------------------------------------------------------------------
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _node(name, fn):
+    return LayerNode(name=name, kind="dense", apply=fn)
+
+
+class TestGraphLint:
+    def test_empty_graph(self):
+        g = LayerGraph("empty")
+        assert [d.code for d in lint_graph(g)] == ["SCN301"]
+        with pytest.raises(GraphLintError):
+            fuse_blocks(g)
+
+    def test_orphan_source_raises_named_diagnostic(self):
+        g = LayerGraph("orphan")
+        g.input(_spec(1, 8))
+        g.add(_node("a", lambda x: x), preds=[0])
+        g.add(_node("lost", lambda x: x), preds=[])    # orphan + extra sink
+        with pytest.raises(ValueError) as ei:          # GraphLintError is one
+            g.validate()
+        assert isinstance(ei.value, GraphLintError)
+        codes = {d.code for d in ei.value.diagnostics}
+        assert "SCN304" in codes
+        assert any(d.subject == "lost" for d in ei.value.diagnostics)
+
+    def test_dangling_pred_after_mutation(self):
+        g = LayerGraph("mut")
+        g.input(_spec(1, 8))
+        g.add(_node("a", lambda x: x), preds=[0])
+        g.preds[1] = [7]                               # rewritten post-add
+        diags = lint_graph(g)
+        assert [d.code for d in diags] == ["SCN302"]
+        assert "dangling" in diags[0].message
+
+    def test_extra_sink(self):
+        g = LayerGraph("sinks")
+        g.input(_spec(1, 8))
+        g.add(_node("a", lambda x: x), preds=[0])
+        g.add(_node("b", lambda x: x), preds=[0])      # 'a' never consumed
+        codes = [d.code for d in lint_graph(g)]
+        assert codes == ["SCN303"]
+
+    def test_missing_apply(self):
+        g = LayerGraph("noapply")
+        g.input(_spec(1, 8))
+        g.add(LayerNode(name="hole", kind="dense", apply=None), preds=[0])
+        assert any(d.code == "SCN305" for d in lint_graph(g))
+
+    def test_shape_chain_mismatch_names_the_declaring_node(self):
+        g = linear_graph("chain", _spec(1, 8),
+                         [_node("a", lambda x: x * 2),
+                          _node("b", lambda x: x + 1)])
+        assert lint_graph(g, check_shapes=True) == []
+        g.nodes[1].out_spec = _spec(1, 16)             # stale declaration
+        diags = lint_graph(g, check_shapes=True)
+        assert diags and all(d.code == "SCN306" for d in diags)
+        assert diags[0].subject == "a"
+        with pytest.raises(GraphLintError):
+            g.validate(check_shapes=True)
+
+    def test_untraced_graph_info(self):
+        g = LayerGraph("untraced")
+        g.input(_spec(1, 8))
+        g.add(_node("a", lambda x: x), preds=[0])
+        diags = lint_graph(g, check_shapes=True)
+        assert [d.code for d in diags] == ["SCN308"]
+        assert diags[0].severity == INFO
+
+    def test_db_output_bytes_cross_check(self):
+        g = linear_graph("xcheck", _spec(1, 8),
+                         [_node("a", lambda x: x),
+                          _node("b", lambda x: jnp.tanh(x))])
+        blocks = fuse_blocks(g)
+        res = [Resource("cloud0", "cloud", CLOUD_VM)]
+        db = benchmark_model(g, res, AnalyticProvider(), runs=1,
+                             blocks=blocks)
+        assert lint_db_against_graph(db, blocks) == []
+        db.records["cloud0"][0].output_bytes = 7       # tampered
+        db.records["cloud0"][0].batch_profile[1] = (0.01, 7)
+        diags = lint_db_against_graph(db, blocks)
+        assert [d.code for d in diags] == ["SCN307"]
+
+
+# ---------------------------------------------------------------------------
+# acceptance property: empty result => error diagnostic (and soundness)
+# ---------------------------------------------------------------------------
+
+def _assert_empty_implies_error(seed):
+    eng, query = _random_engine_and_query(seed)
+    for result in (eng.run(query),
+                   eng.frontier(query, strategy="exhaustive"),
+                   eng.frontier(query, strategy="lattice")):
+        rendered = [d.render() for d in result.diagnostics]
+        if not result.configs:
+            assert has_errors(result.diagnostics), \
+                f"empty result carried no error diagnostic: {rendered}"
+        else:
+            # soundness: an error-severity finding must imply infeasibility
+            assert not has_errors(result.diagnostics), \
+                f"non-empty result carried an error: {rendered}"
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_empty_result_always_carries_error_diagnostic(seed):
+    _assert_empty_implies_error(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10 ** 9))
+    @settings(max_examples=30, deadline=None)
+    def test_empty_result_error_diagnostic_property(seed):
+        _assert_empty_implies_error(seed)
