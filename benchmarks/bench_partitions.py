@@ -24,6 +24,14 @@ Run standalone in smoke mode for CI::
     # statistics land in the JSON artifact):
     PYTHONPATH=src python -m benchmarks.bench_partitions --smoke-frontier \
         --out results/bench_partitions_smoke_frontier.json
+
+    # DAG-general partitioning: branchy MoE / enc-dec graphs fused with
+    # fuse_block_dag over 3G/4G/wired; fails unless the SP-lattice solve
+    # and frontier equal the DAG-aware exhaustive oracle on every query,
+    # and unless some optimal config splits a parallel region across
+    # resources (the capability chain fusing cannot express):
+    PYTHONPATH=src python -m benchmarks.bench_partitions --smoke-dag \
+        --out results/bench_partitions_smoke_dag.json
 """
 
 from __future__ import annotations
@@ -237,7 +245,12 @@ def scenario_frontier_exact(quick=True, models=None, batch_sizes=(1, 4),
             for qname, q in queries.items():
                 exh = s.frontier(m, q, strategy="exhaustive")
                 lat = s.frontier(m, q, strategy="lattice")
+                auto = s.frontier(m, q)
                 equal = _frontiers_match(exh.configs, lat.configs)
+                # auto-dispatch must have picked the faster of the two
+                # forced strategies on this (space, constraints) point
+                forced = {"exhaustive": exh, "lattice": lat}
+                fastest = min(forced, key=lambda k: forced[k].query_time_s)
                 ok = "PASS" if equal else "FAIL"
                 if not equal:
                     scenario_frontier_exact.failures.append(
@@ -245,11 +258,16 @@ def scenario_frontier_exact(quick=True, models=None, batch_sizes=(1, 4),
                 print(f"  [{net}] {m}/{qname}: front={len(exh.configs)} "
                       f"exh={exh.query_time_s * 1e3:.1f}ms "
                       f"lat={lat.query_time_s * 1e3:.1f}ms "
+                      f"auto={auto.strategy}"
+                      f"({auto.query_time_s * 1e3:.1f}ms, forced-best "
+                      f"{fastest}) "
                       f"labels={lat.labels_kept}+{lat.labels_pruned} {ok}")
                 rows.append((f"front_exact/{net}/{m}/{qname}",
                              lat.query_time_s * 1e6, len(lat.configs)))
                 rows.append((f"front_exact_oracle/{net}/{m}/{qname}",
                              exh.query_time_s * 1e6, len(exh.configs)))
+                rows.append((f"front_auto/{net}/{m}/{qname}",
+                             auto.query_time_s * 1e6, auto.strategy))
                 rows.append((f"front_labels/{net}/{m}/{qname}",
                              float(lat.labels_kept),
                              int(lat.labels_pruned)))
@@ -412,6 +430,132 @@ def scenario_batched(quick=True, models=None, batch_sizes=(1, 4),
 scenario_batched.failures = []
 
 
+def _dag_graphs():
+    """Genuinely branchy layer graphs for the DAG-general gate: an
+    expert-sharded MoE layer (diamond with a residual direct edge) and a
+    reduced enc-dec LM (encoder vs target-embedding branches joined at the
+    decoder's cross-attention)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import build_model, get_config
+    from repro.models import layers as L
+    from repro.models.graph_adapter import encdec_to_graph, moe_to_graph
+    from repro.models.moe import moe_spec
+
+    p = L.init_tree(moe_spec(32, 64, 4), jax.random.PRNGKey(0), jnp.float32)
+    moe = moe_to_graph(p, batch=1, seq_len=8, d_model=32, n_experts=4,
+                       top_k=2, n_shards=2)
+    cfg = get_config("whisper-medium").replace(
+        name="encdec-smoke", n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=256, encoder_layers=4, encoder_len=16,
+        q_chunk=16, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    encdec = encdec_to_graph(model, params, batch=1, seq_len=8, enc_splits=2)
+    return [moe, encdec]
+
+
+def _splits_parallel_region(dag, assignment) -> bool:
+    """True when ``assignment`` places the blocks of some parallel region
+    on more than one resource — the placement freedom chain fusing cannot
+    express."""
+    owner = {n: b.index for b in dag for n in b.node_ids}
+    for region in dag.parallel_regions:
+        blocks = {owner[n] for n in region}
+        if len({assignment[b] for b in blocks}) > 1:
+            return True
+    return False
+
+
+def scenario_dag(quick=True):
+    """DAG-general partitioning gate: branchy graphs fused with
+    ``fuse_block_dag`` over the paper networks.  Gates on (i) the SP-tree
+    lattice returning exactly the DAG-aware exhaustive oracle's result —
+    top-1 score per objective and frontier vector set, free and under
+    constraints — and (ii) at least one optimal/frontier config splitting a
+    parallel region across resources."""
+    import numpy as np
+
+    import repro.core.query as query_mod
+
+    print("\n# DAG-general partitioning — branchy graphs, lattice vs oracle")
+    scenario_dag.failures = []
+    rows = []
+    graphs = _dag_graphs()
+    split_seen = []
+    for net in ("3g", "4g", "wired"):
+        s = scission_for(net)
+        for g in graphs:
+            s.benchmark(g, dag=True)
+            dag = s._dags[g.name]
+            spec = g.nodes[0].out_spec
+            input_bytes = float(int(np.prod(spec.shape)) *
+                                np.dtype(spec.dtype).itemsize)
+            eng = s.engine(g.name, input_bytes)
+            space = eng._search_space()
+            queries = {
+                "free": Query(top_n=1),
+                "thpt": Query(top_n=1, objective=THROUGHPUT),
+                "must": Query(top_n=1, must_use=("edge1", "edge2")),
+                "tmax": Query(top_n=1,
+                              max_resource_time={"device": 1e-4}),
+            }
+            for qname, q in queries.items():
+                r_auto = eng.run(q)
+                old = query_mod.EXHAUSTIVE_LIMIT
+                try:
+                    query_mod.EXHAUSTIVE_LIMIT = -1
+                    r_sp = eng.run(q)
+                finally:
+                    query_mod.EXHAUSTIVE_LIMIT = old
+                sc = q.objective.score
+                equal = ([sc(c) for c in r_auto.configs]
+                         == [sc(c) for c in r_sp.configs])
+                if not equal:
+                    scenario_dag.failures.append(
+                        f"solve/{net}/{g.name}/{qname}")
+                for cfg in r_auto.configs + r_sp.configs:
+                    if _splits_parallel_region(dag, cfg.assignment):
+                        split_seen.append(f"{net}/{g.name}/{qname}")
+                rows.append((f"dag/{net}/{g.name}/{qname}",
+                             r_auto.query_time_s * 1e6,
+                             r_auto.strategy))
+                rows.append((f"dag_sp/{net}/{g.name}/{qname}",
+                             r_sp.query_time_s * 1e6,
+                             round(sc(r_sp.best), 5) if r_sp.best else None))
+            fe = eng.frontier(strategy="exhaustive")
+            fl = eng.frontier(strategy="lattice")
+            fequal = _frontiers_match(fe.configs, fl.configs)
+            if not fequal:
+                scenario_dag.failures.append(f"frontier/{net}/{g.name}")
+            for cfg in fl.configs:
+                if _splits_parallel_region(dag, cfg.assignment):
+                    split_seen.append(f"{net}/{g.name}/frontier")
+            ok = "PASS" if fequal else "FAIL"
+            print(f"  [{net}] {g.name}: blocks={len(dag)} space={space} "
+                  f"front={len(fe.configs)} "
+                  f"exh={fe.query_time_s * 1e3:.1f}ms "
+                  f"lat={fl.query_time_s * 1e3:.1f}ms {ok}")
+            rows.append((f"dag_front/{net}/{g.name}",
+                         fl.query_time_s * 1e6, len(fl.configs)))
+            rows.append((f"dag_front_oracle/{net}/{g.name}",
+                         fe.query_time_s * 1e6, len(fe.configs)))
+    if not split_seen:
+        scenario_dag.failures.append(
+            "no-split: no optimal config placed a parallel region's "
+            "branches on distinct resources")
+    else:
+        print(f"  parallel-region splits observed at "
+              f"{len(set(split_seen))} query points, e.g. "
+              f"{sorted(set(split_seen))[0]}")
+    rows.append(("dag/split_points", 0.0, len(set(split_seen))))
+    return rows
+
+
+scenario_dag.failures = []
+
+
 def run(quick: bool = True):
     rows = []
     rows += scenario_network(quick)
@@ -425,6 +569,7 @@ def run(quick: bool = True):
     rows += scenario_frontier_exact(quick)
     rows += scenario_frontier_constrained(quick)
     rows += scenario_frontier_scale(quick)
+    rows += scenario_dag(quick)
     return rows
 
 
@@ -453,6 +598,14 @@ def smoke_frontier():
     return rows
 
 
+def smoke_dag():
+    """CI pass for DAG-general partitioning: branchy MoE / enc-dec graphs
+    over 3G/4G/wired, gated on SP-lattice vs DAG-aware-oracle equality
+    (top-1 per objective, full frontier) and on at least one optimal
+    config splitting a parallel region across resources."""
+    return scenario_dag(quick=True)
+
+
 def smoke():
     """Minimal single-model pass for CI: one CNN, all three network
     conditions, exercising the latency, throughput and frontier query
@@ -478,6 +631,10 @@ def main() -> None:
     ap.add_argument("--smoke-frontier", action="store_true",
                     help="CI pass gated on lattice-vs-exhaustive frontier "
                          "equality plus fleet-sized query-time scaling")
+    ap.add_argument("--smoke-dag", action="store_true",
+                    help="CI pass for DAG-general partitioning: branchy "
+                         "graphs, SP lattice vs DAG-aware oracle, "
+                         "parallel-region splits")
     ap.add_argument("--full", action="store_true", help="all models")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
@@ -486,6 +643,8 @@ def main() -> None:
         rows = smoke_batched()
     elif args.smoke_frontier:
         rows = smoke_frontier()
+    elif args.smoke_dag:
+        rows = smoke_dag()
     elif args.smoke:
         rows = smoke()
     else:
@@ -502,10 +661,11 @@ def main() -> None:
     failures = (scenario_throughput.failures + scenario_batched.failures
                 + scenario_frontier_exact.failures
                 + scenario_frontier_constrained.failures
-                + scenario_frontier_scale.failures)
+                + scenario_frontier_scale.failures
+                + scenario_dag.failures)
     if failures:
         print(f"FAILED validation (throughput / frontier exactness / "
-              f"frontier scaling): {', '.join(failures)}")
+              f"frontier scaling / DAG partitioning): {', '.join(failures)}")
         raise SystemExit(1)
 
 

@@ -81,17 +81,40 @@ def _lint_kernels(vmem_limit: float) -> list[Diagnostic]:
     return diags
 
 
+def _non_sp_example():
+    """A graph with a *crossed* skip (a→c and b→d crossing): deliberately
+    not series-parallel, so the ``graphs`` target demonstrably exercises
+    SCN309 — its linearisation fallback — alongside the zoo's SP graphs."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.graph import LayerGraph, LayerNode
+
+    def node(name):
+        return LayerNode(name=name, kind="dense", apply=lambda *xs: sum(xs))
+
+    g = LayerGraph("crossed-skips")
+    i = g.input(jax.ShapeDtypeStruct((1, 8), jnp.float32))
+    a = g.add(node("a"), [i])
+    b = g.add(node("b"), [a])
+    c = g.add(node("c"), [b, a])     # skip a→c
+    g.add(node("d"), [c, b])         # skip b→d crosses it
+    g.trace()
+    return g
+
+
 def _lint_graphs() -> list[Diagnostic]:
     from .graph_lint import lint_graph
     from repro.models import cnn_zoo
 
     diags: list[Diagnostic] = []
-    for builder in (cnn_zoo.mobilenetv2, cnn_zoo.resnet50):
+    for builder in (cnn_zoo.mobilenetv2, cnn_zoo.resnet50, _non_sp_example):
         g = builder()
         gdiags = lint_graph(g, check_shapes=True)
         diags.extend(gdiags)
+        codes = sorted({d.code for d in gdiags})
         print(f"  {g.name}: {len(g.nodes)} nodes, "
-              f"{len(gdiags)} diagnostics")
+              f"{len(gdiags)} diagnostics"
+              + (f" [{', '.join(codes)}]" if codes else ""))
     return diags
 
 

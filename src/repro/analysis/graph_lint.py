@@ -121,6 +121,60 @@ def lint_graph(graph: Any, *, check_shapes: bool = False) -> list[Diagnostic]:
                 hint="call graph.trace() first"))
         else:
             diags.extend(_lint_shape_chain(graph))
+    if not errors(diags):
+        diags.extend(_lint_sp_structure(graph))
+    return diags
+
+
+def _lint_sp_structure(graph: Any) -> list[Diagnostic]:
+    """SCN309/SCN310: series-parallel structure of a branchy graph.
+
+    * SCN309 — a region is **not series-parallel** (a branch exits through
+      more than one node, or crossing skips leave no fork-join shape):
+      ``fuse_block_dag`` linearises it into one block, so no cut can land
+      inside it.  Names the offending subgraph's nodes.
+    * SCN310 — the graph has a parallel region but chain fusing
+      (``fuse_blocks``) is in use semantics-wise: any consumer that fuses
+      this graph as a chain collapses the region into a single block and
+      the branch-placement freedom is silently lost.  Emitted whenever a
+      parallel region exists and the chain fusing would merge its nodes
+      into one block — i.e. always, since chain cuts cannot enter a
+      multi-producer region.
+
+    Both are WARNINGs: the graph is well-formed either way; only the
+    partitioner's freedom is affected.
+    """
+    from .diagnostics import WARNING
+
+    diags: list[Diagnostic] = []
+    try:
+        from ..core.graph import sp_summary
+    except Exception:                               # noqa: BLE001
+        return diags                # core (jax) unavailable: skip
+    parallel_regions, collapsed = sp_summary(graph)
+    for seg in collapsed:
+        names = ", ".join(graph.nodes[i].name for i in seg[:6])
+        if len(seg) > 6:
+            names += f", … ({len(seg)} nodes)"
+        diags.append(Diagnostic(
+            "SCN309", WARNING,
+            f"graph {graph.name!r}: subgraph [{names}] is not "
+            "series-parallel; fuse_block_dag linearises it into one block "
+            "and no partition point can land inside it",
+            subject=graph.nodes[seg[0]].name,
+            hint="restructure crossing skip connections into nested "
+                 "fork-join regions to expose its cut points"))
+    if parallel_regions:
+        total = sum(len(r) for r in parallel_regions)
+        diags.append(Diagnostic(
+            "SCN310", WARNING,
+            f"graph {graph.name!r} has {len(parallel_regions)} parallel "
+            f"region(s) ({total} branch nodes) that chain fusing "
+            "(fuse_blocks) collapses into single blocks, discarding "
+            "branch-placement freedom",
+            subject=graph.name,
+            hint="fuse with fuse_block_dag / benchmark(dag=True) to "
+                 "partition branches across resources"))
     return diags
 
 

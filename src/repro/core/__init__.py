@@ -1,6 +1,7 @@
 """Scission core: graph IR, benchmarking, partitioning, querying."""
 
-from .graph import Block, LayerGraph, LayerNode, fuse_blocks, linear_graph
+from .graph import (Block, BlockDag, LayerGraph, LayerNode, SPNode,
+                    fuse_block_dag, fuse_blocks, linear_graph, sp_summary)
 from .resources import (DeviceModel, Resource, paper_testbed, tpu_testbed,
                         tpu_slice, TPU_V5E, TPU_V5E_PEAK_FLOPS,
                         TPU_V5E_HBM_BW, TPU_V5E_ICI_BW)
@@ -14,12 +15,16 @@ from .partition import (Segment, PartitionConfig, CostModel, Objective,
                         Constraints, PartitionLattice, BottleneckLattice,
                         ParetoLattice, enumerate_partitions,
                         objective_vector, ordered_pipelines, rank,
-                        pareto_frontier, dominates, trim_replicas)
+                        pareto_frontier, dominates, trim_replicas,
+                        DagCostModel, DagPartitionConfig, SPSolver,
+                        dag_config_satisfies, dag_search_space,
+                        enumerate_dag_partitions)
 from .query import Query, QueryEngine, QueryResult
 from .planner import Scission
 
 __all__ = [
-    "Block", "LayerGraph", "LayerNode", "fuse_blocks", "linear_graph",
+    "Block", "BlockDag", "LayerGraph", "LayerNode", "SPNode",
+    "fuse_block_dag", "fuse_blocks", "linear_graph", "sp_summary",
     "DeviceModel", "Resource", "paper_testbed", "tpu_testbed", "tpu_slice",
     "TPU_V5E", "TPU_V5E_PEAK_FLOPS", "TPU_V5E_HBM_BW", "TPU_V5E_ICI_BW",
     "Link", "NetworkModel", "THREE_G", "FOUR_G", "WIRED", "EDGE_CLOUD",
@@ -31,5 +36,7 @@ __all__ = [
     "Constraints", "PartitionLattice", "BottleneckLattice", "ParetoLattice",
     "enumerate_partitions", "objective_vector", "ordered_pipelines", "rank",
     "pareto_frontier", "dominates", "trim_replicas",
+    "DagCostModel", "DagPartitionConfig", "SPSolver",
+    "dag_config_satisfies", "dag_search_space", "enumerate_dag_partitions",
     "Query", "QueryEngine", "QueryResult", "Scission",
 ]

@@ -310,13 +310,16 @@ class TimingProvider:
         if self.tuner is not None:
             self.tuner.tune_block(block, resource=resource.name)
         fn = jax.jit(block.make_callable())
-        x = _zeros_like_spec(_batched_input(block.in_spec, batch))
-        out = fn(x)  # warm-up / compile
+        # one input per entry tensor — a join block of a branchy graph has
+        # several; chain blocks degenerate to the single-input call
+        xs = [_zeros_like_spec(_batched_input(s, batch))
+              for s in block.in_specs]
+        out = fn(*xs)  # warm-up / compile
         jax.block_until_ready(out)
         samples = []
         for _ in range(runs):
             t0 = time.perf_counter()
-            jax.block_until_ready(fn(x))
+            jax.block_until_ready(fn(*xs))
             samples.append(time.perf_counter() - t0)
         mean = statistics.fmean(samples) * resource.speed_factor
         std = (statistics.pstdev(samples) if len(samples) > 1 else 0.0)
@@ -340,8 +343,8 @@ class CompiledCostProvider:
                 batch: int = 1) -> tuple[float, float, float, float]:
         if self.tuner is not None:
             self.tuner.tune_block(block, resource=resource.name)
-        spec = _batched_input(block.in_spec, batch)
-        lowered = jax.jit(block.make_callable()).lower(spec)
+        specs = [_batched_input(s, batch) for s in block.in_specs]
+        lowered = jax.jit(block.make_callable()).lower(*specs)
         cost = compiled_costs(lowered.compile())
         flops = cost.get("flops", 0.0)
         nbytes = cost.get("bytes accessed", 0.0)
@@ -362,8 +365,9 @@ class AnalyticProvider:
                 batch: int = 1) -> tuple[float, float, float, float]:
         flops = block.flops * batch
         # memory traffic ~ params once + activations in/out per request
-        in_bytes = int(np.prod(block.in_spec.shape)) * \
-            np.dtype(block.in_spec.dtype).itemsize
+        # (every entry tensor of a multi-entry join block is read)
+        in_bytes = sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                       for s in block.in_specs)
         nbytes = block.param_bytes + (in_bytes + block.output_bytes) * batch
         t = resource.device.layer_time(flops, nbytes)
         return t, 0.0, flops, float(nbytes)

@@ -1,0 +1,1158 @@
+"""Partition configuration generation and ranking (Scission §II-C Steps 4-5).
+
+Two engines over the same cost model:
+
+* :func:`enumerate_partitions` — the paper's **exhaustive** enumeration of
+  every native and distributed configuration over every ordered resource
+  pipeline.  Kept as the validation oracle and for rich post-hoc queries.
+* :class:`PartitionLattice` — a **beyond-paper** Viterbi lattice over
+  (block, resource) states.  Exact under the paper's additive cost model
+  (assumptions 1 and 2 in §III-A), O(B·R²·2^R) with must-use masks, and
+  supports k-best (top-N) extraction.  This is what lets the same decision
+  procedure scale from the paper's 3-tier testbed to a 1000+-node fleet,
+  and what keeps re-planning (elastic runtime) inside the paper's 50 ms
+  query budget.
+* :class:`BottleneckLattice` — the exact min-bottleneck (max-throughput)
+  companion DP.  Under steady-state pipelined serving the objective is the
+  *max* over stage/hop times, not their sum, so the additive Viterbi
+  lattice is not exact; this DP works at segment granularity with minimax
+  composition instead.
+* :class:`ParetoLattice` — the exact multi-objective companion: a
+  label-correcting DP over the same (block, resource, must-use-mask)
+  states where each state keeps its full **non-dominated set** of vector
+  labels over (latency, bottleneck, transfer) instead of a scalar k-best
+  list.  Latency/transfer compose additively and the bottleneck by
+  minimax — all monotone — so per-state dominance pruning is exact and
+  ``QueryEngine.frontier`` no longer has to approximate the trade-off
+  surface from three single-objective k-best solves on fleet-sized
+  spaces.  An optional ε-dominance knob bounds label-set growth.
+
+Every Step-6 constraint kind — including the path-dependent
+``max_resource_time`` / ``min_blocks_on`` — is folded into each lattice's
+DP state (see :class:`Constraints` / :class:`_LatticeBase`), so all three
+solvers return the true constrained optimum / frontier with no
+post-filtering.
+
+Cost model (paper's two assumptions, validated in tests/test_bench.py):
+
+    latency(config) = comm(source -> r_1, input_bytes)
+                    + Σ_segments Σ_blocks time(r_i, b)
+                    + Σ_cuts     comm(r_i -> r_{i+1}, out_bytes[cut])
+
+Pipelined-serving model (streamed deployments): requests move through the
+pipeline in batches of ``batch_size`` and each compute stage may run on
+``replicas[k]`` copies of its resource, so the steady-state rate is limited
+by the slowest *effective* stage — a compute segment serves
+``replicas[k] * batch`` requests per ``stage_time(batch)``, a communication
+hop (including the source->first-resource input hop) serves ``batch``
+requests per per-batch transfer time:
+
+    period_k    = stage_time_k(batch) / (replicas_k * batch)   (compute)
+    period_j    = hop_time_j(batch)   / batch                  (comm)
+    bottleneck  = max_k period_k
+    throughput_rps = 1 / bottleneck
+
+With ``batch_size == 1`` and all-ones replicas this reduces to the
+one-request-per-stage model (max over raw stage/hop times).  Stage times at
+``batch > 1`` come from the benchmark DB's measured batch profiles
+(log-linear interpolation between measured points, clamped at the measured
+extremes), so batching economies are priced empirically, not assumed.
+"""
+
+from __future__ import annotations
+
+import bisect
+import itertools
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from ..bench import BenchmarkDB
+from ..network import NetworkModel
+from ..resources import Resource
+
+
+@dataclass(frozen=True)
+class Segment:
+    resource: str
+    start: int          # first block index (inclusive)
+    end: int            # last block index (inclusive)
+
+
+@dataclass
+class PartitionConfig:
+    """One ranked configuration (a row of the paper's Table IV).
+
+    A config is an **operating point**: segments plus the batch size the
+    per-stage timings were priced at and the per-segment replica counts.
+    ``latency_s`` / ``stage_compute_s`` / ``stage_comm_s`` /
+    ``transfer_bytes`` are all *per batch* on *one replica* (at
+    ``batch_size == 1`` that is exactly the paper's per-request model);
+    ``bottleneck_s`` / ``throughput_rps`` are per-request effective values.
+    """
+
+    model: str
+    segments: tuple[Segment, ...]
+    latency_s: float
+    compute_s: dict[str, float]
+    comm_s: float
+    transfer_bytes: float           # total inter-resource bytes (incl. input)
+    input_comm_s: float = 0.0
+    # per-stage timings for pipelined serving: one compute time per segment,
+    # one comm time per hop between consecutive segments
+    stage_compute_s: tuple[float, ...] = ()
+    stage_comm_s: tuple[float, ...] = ()
+    # operating point: batch the stage timings were priced at, and replica
+    # count per segment (empty tuple == one replica everywhere)
+    batch_size: int = 1
+    replicas: tuple[int, ...] = ()
+
+    @property
+    def resources(self) -> tuple[str, ...]:
+        return tuple(s.resource for s in self.segments)
+
+    @property
+    def is_native(self) -> bool:
+        return len(self.segments) == 1
+
+    def replica_count(self, k: int) -> int:
+        """Replicas serving compute stage ``k`` (1 when unspecified)."""
+        return self.replicas[k] if k < len(self.replicas) else 1
+
+    @property
+    def stage_periods_s(self) -> tuple[float, ...]:
+        """Effective per-request service period of every pipeline stage, in
+        pipeline order: input hop (if any), then each compute segment
+        followed by its outgoing comm hop.  A compute stage with ``r``
+        replicas at batch ``b`` serves ``r*b`` requests per ``stage_time``;
+        a hop serves ``b`` requests per per-batch transfer."""
+        b = max(1, self.batch_size)
+        periods: list[float] = []
+        if self.input_comm_s > 0.0:
+            periods.append(self.input_comm_s / b)
+        for k, t in enumerate(self.stage_compute_s):
+            periods.append(t / (self.replica_count(k) * b))
+            if k < len(self.stage_comm_s):
+                periods.append(self.stage_comm_s[k] / b)
+        return tuple(periods)
+
+    @property
+    def bottleneck_s(self) -> float:
+        """Slowest effective pipeline stage (replica- and batch-adjusted) —
+        the steady-state per-request period under pipelined serving."""
+        periods = self.stage_periods_s
+        return max(periods) if periods else self.latency_s
+
+    @property
+    def throughput_rps(self) -> float:
+        """Steady-state pipelined request rate = 1 / effective bottleneck."""
+        b = self.bottleneck_s
+        return 1.0 / b if b > 0.0 else float("inf")
+
+    def describe(self) -> str:
+        parts = [f"{s.resource}: {s.start}-{s.end}" if s.start != s.end
+                 else f"{s.resource}: {s.start}" for s in self.segments]
+        op = ""
+        if self.batch_size != 1:
+            op += f" batch={self.batch_size}"
+        if any(r != 1 for r in self.replicas):
+            op += " reps=" + "x".join(str(self.replica_count(k))
+                                      for k in range(len(self.segments)))
+        return (f"[{self.model}] " + " | ".join(parts)
+                + f"  latency={self.latency_s * 1e3:.1f}ms"
+                + f" thpt={self.throughput_rps:.1f}rps"
+                + f" transfer={self.transfer_bytes / 1e6:.3f}MB" + op)
+
+
+@dataclass
+class CostModel:
+    """Precomputed vectorised costs for one (model, resource set, network)
+    at one operating point (batch size + per-resource replica budget).
+
+    ``batch_size`` selects the per-batch block times from the DB's measured
+    batch profiles (interpolated when unmeasured); ``replica_budget`` maps a
+    resource name to the number of copies a stage placed on it may use
+    (default 1).  All per-config quantities (latency, stage times, transfer)
+    are per batch; the effective per-request stage periods divide by
+    ``replicas * batch`` (compute) / ``batch`` (comm).
+    """
+
+    db: BenchmarkDB
+    resources: list[Resource]
+    network: NetworkModel
+    source: str                      # where the input data originates
+    input_bytes: float               # per request
+    batch_size: int = 1
+    replica_budget: dict[str, int] = field(default_factory=dict)
+
+    times: np.ndarray = field(init=False)        # (R, B) per-batch seconds
+    cum: np.ndarray = field(init=False)          # (R, B+1) prefix sums
+    out_bytes: np.ndarray = field(init=False)    # (B,) per-batch bytes
+
+    def __post_init__(self):
+        names = [r.name for r in self.resources]
+        missing = [n for n in names if n not in self.db.records]
+        if missing:
+            raise ValueError(
+                f"resource(s) {', '.join(sorted(missing))} not benchmarked "
+                f"for model {self.db.model!r}; run Scission.benchmark() / "
+                "benchmark_resource() for them first")
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        max_batch = self.db.max_batch(names)
+        if self.batch_size > max_batch:
+            # pricing batch b from a profile clamped at max_batch would
+            # divide the clamped time by b — linear throughput extrapolation
+            # the measurements do not support
+            raise ValueError(
+                f"batch_size {self.batch_size} exceeds the largest measured "
+                f"batch ({max_batch}) for model {self.db.model!r}; "
+                "re-run benchmark_model(batch_sizes=...) to cover it")
+        bad = {r: n for r, n in self.replica_budget.items() if n < 1}
+        if bad:
+            raise ValueError(f"replica budget must be >= 1, got {bad}")
+        self.times = self.db.times_matrix(names, batch=self.batch_size)
+        self.cum = np.concatenate(
+            [np.zeros((len(names), 1)), np.cumsum(self.times, axis=1)], axis=1)
+        self.out_bytes = self.db.out_bytes_vector(batch=self.batch_size)
+        self._idx = {n: i for i, n in enumerate(names)}
+
+    @property
+    def n_blocks(self) -> int:
+        return self.db.n_blocks
+
+    @property
+    def batch_input_bytes(self) -> float:
+        """Bytes of input data entering the pipeline per batch."""
+        return self.input_bytes * self.batch_size
+
+    def replicas_for(self, resource: str) -> int:
+        return max(1, int(self.replica_budget.get(resource, 1)))
+
+    def segment_time(self, resource: str, start: int, end: int) -> float:
+        """Per-batch compute time of blocks ``start..end`` on one replica."""
+        i = self._idx[resource]
+        return float(self.cum[i, end + 1] - self.cum[i, start])
+
+    def comm(self, src: str, dst: str, nbytes: float) -> float:
+        return self.network.comm_time(src, dst, nbytes)
+
+    # -- effective per-request periods (the minimax DP's stage costs) --------
+    def stage_period(self, resource: str, start: int, end: int) -> float:
+        """Per-request service period of a compute stage: ``replicas``
+        copies each finish a batch of ``batch_size`` per segment time."""
+        return self.segment_time(resource, start, end) / (
+            self.replicas_for(resource) * self.batch_size)
+
+    def hop_period(self, src: str, dst: str, nbytes: float) -> float:
+        """Per-request service period of a comm hop moving ``nbytes`` (a
+        per-batch quantity) between stages."""
+        return self.comm(src, dst, nbytes) / self.batch_size
+
+    def evaluate(self, segments: Sequence[Segment],
+                 objective: "Objective | None" = None) -> PartitionConfig:
+        compute = {}
+        comm = 0.0
+        xfer = 0.0
+        first = segments[0].resource
+        input_comm = 0.0
+        if first != self.source:
+            input_comm = self.comm(self.source, first, self.batch_input_bytes)
+            xfer += self.batch_input_bytes
+        stage_compute: list[float] = []
+        stage_comm: list[float] = []
+        for k, seg in enumerate(segments):
+            t = self.segment_time(seg.resource, seg.start, seg.end)
+            compute[seg.resource] = compute.get(seg.resource, 0.0) + t
+            stage_compute.append(t)
+            if k + 1 < len(segments):
+                nbytes = float(self.out_bytes[seg.end])
+                hop = self.comm(seg.resource, segments[k + 1].resource, nbytes)
+                stage_comm.append(hop)
+                comm += hop
+                xfer += nbytes
+        latency = input_comm + sum(compute.values()) + comm
+        return PartitionConfig(
+            model=self.db.model, segments=tuple(segments), latency_s=latency,
+            compute_s=compute, comm_s=comm, transfer_bytes=xfer,
+            input_comm_s=input_comm,
+            stage_compute_s=tuple(stage_compute),
+            stage_comm_s=tuple(stage_comm),
+            batch_size=self.batch_size,
+            replicas=tuple(self.replicas_for(s.resource) for s in segments))
+
+
+@dataclass(frozen=True)
+class Objective:
+    """Ranking objective: minimise w_latency·latency + w_transfer·transfer.
+
+    The paper's Step 5 default is pure latency; Step 6 allows data-transfer
+    and combined objectives.
+    """
+
+    w_latency: float = 1.0
+    w_transfer_per_mb: float = 0.0
+
+    def score(self, cfg: PartitionConfig) -> float:
+        return (self.w_latency * cfg.latency_s
+                + self.w_transfer_per_mb * cfg.transfer_bytes / 1e6)
+
+
+@dataclass(frozen=True)
+class ThroughputObjective(Objective):
+    """Maximise steady-state pipelined throughput == minimise the bottleneck
+    stage time (max of stage compute and per-hop comm).
+
+    Because the score is a *max* rather than a sum, the additive
+    :class:`PartitionLattice` is not exact for this objective — the query
+    engine dispatches it to :class:`BottleneckLattice` instead.
+    """
+
+    def score(self, cfg: PartitionConfig) -> float:
+        return cfg.bottleneck_s
+
+
+LATENCY = Objective()
+TRANSFER = Objective(w_latency=0.0, w_transfer_per_mb=1.0)
+THROUGHPUT = ThroughputObjective()
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive enumeration (paper-faithful Step 4)
+# ---------------------------------------------------------------------------
+
+def ordered_pipelines(resources: list[Resource]) -> list[tuple[str, ...]]:
+    """All ordered sub-pipelines: at most one resource per tier, data flows
+    device -> edge -> cloud (the paper's native + distributed configs)."""
+    tiers: dict[int, list[str]] = {}
+    for r in sorted(resources, key=lambda r: r.order):
+        tiers.setdefault(r.order, []).append(r.name)
+    levels = [tiers[k] for k in sorted(tiers)]
+    pipes: list[tuple[str, ...]] = []
+    for mask in itertools.product(*[[None, *lvl] for lvl in levels]):
+        pipe = tuple(m for m in mask if m is not None)
+        if pipe:
+            pipes.append(pipe)
+    return pipes
+
+
+def enumerate_partitions(cost: CostModel,
+                         pipelines: Iterable[tuple[str, ...]] | None = None,
+                         max_configs: int = 2_000_000
+                         ) -> list[PartitionConfig]:
+    """Every cut combination for every pipeline.  Exact but exponential in
+    pipeline length; the lattice below is the scalable path."""
+    B = cost.n_blocks
+    pipelines = list(pipelines) if pipelines is not None else \
+        ordered_pipelines(cost.resources)
+    configs: list[PartitionConfig] = []
+    n = 0
+    for pipe in pipelines:
+        k = len(pipe)
+        if k > B:
+            continue
+        for cuts in itertools.combinations(range(1, B), k - 1):
+            bounds = [0, *cuts, B]
+            segs = [Segment(pipe[i], bounds[i], bounds[i + 1] - 1)
+                    for i in range(k)]
+            configs.append(cost.evaluate(segs))
+            n += 1
+            if n > max_configs:
+                raise RuntimeError(
+                    f"exhaustive enumeration exceeded {max_configs} configs; "
+                    "use PartitionLattice")
+    return configs
+
+
+def rank(configs: list[PartitionConfig], objective: Objective = LATENCY,
+         top_n: int | None = None) -> list[PartitionConfig]:
+    out = sorted(configs, key=objective.score)
+    return out if top_n is None else out[:top_n]
+
+
+def trim_replicas(cfg: PartitionConfig) -> PartitionConfig:
+    """Right-size an operating point: shrink each stage's replica count to
+    the minimum that keeps the bottleneck (hence throughput) unchanged.
+
+    A replica budget is an upper bound; a stage that is not the bottleneck
+    may hit the same rate with fewer copies.  Frontier results are trimmed
+    so operators never over-provision to match a reported operating point.
+    """
+    if not cfg.replicas or all(r == 1 for r in cfg.replicas):
+        return cfg
+    b = max(1, cfg.batch_size)
+    bneck = cfg.bottleneck_s
+    if bneck <= 0.0:
+        return cfg
+    trimmed = []
+    for k, t in enumerate(cfg.stage_compute_s):
+        need = max(1, math.ceil(t / (b * bneck) - 1e-12))
+        trimmed.append(min(cfg.replica_count(k), need))
+    return replace(cfg, replicas=tuple(trimmed))
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier over (latency, throughput, transfer)
+# ---------------------------------------------------------------------------
+
+def objective_vector(cfg: PartitionConfig) -> tuple[float, float, float]:
+    """The canonical minimised objective vector of the frontier machinery:
+    (latency_s, bottleneck_s, transfer_bytes) — ``bottleneck_s`` stands in
+    for -throughput.  Every frontier comparison (Pareto filters, elastic
+    ``frontier_shift``, bench equality gates) goes through this one
+    definition."""
+    return (cfg.latency_s, cfg.bottleneck_s, cfg.transfer_bytes)
+
+
+_objective_vector = objective_vector        # internal alias
+
+
+def dominates(a: PartitionConfig, b: PartitionConfig) -> bool:
+    """True iff ``a`` is no worse than ``b`` on latency, throughput and
+    transfer, and strictly better on at least one."""
+    va, vb = _objective_vector(a), _objective_vector(b)
+    return all(x <= y for x, y in zip(va, vb)) and va != vb
+
+
+def pareto_frontier(configs: Sequence[PartitionConfig]
+                    ) -> list[PartitionConfig]:
+    """Exact non-dominated set over (latency, throughput, transfer).
+
+    Processes candidates in lexicographic objective order so each point only
+    needs checking against already-accepted frontier members (any dominator
+    of p is itself dominated only by points that dominate p, and sorts
+    before p).  Configs with identical objective vectors are all kept —
+    they are distinct operating points with equal cost.
+    """
+    if not configs:
+        return []
+    order = sorted(range(len(configs)),
+                   key=lambda i: _objective_vector(configs[i]))
+    front: list[int] = []
+    pts = [_objective_vector(c) for c in configs]
+    for i in order:
+        p = pts[i]
+        if any(all(x <= y for x, y in zip(pts[j], p)) and pts[j] != p
+               for j in front):
+            continue
+        front.append(i)
+    return [configs[i] for i in front]
+
+
+# ---------------------------------------------------------------------------
+# DP lattice (beyond-paper exact search + k-best)
+# ---------------------------------------------------------------------------
+
+class Constraints:
+    """Hard constraints on the partitioning search (Scission Step 6).
+
+    **All constraints are exact in every strategy** — the exhaustive
+    enumeration filters whole configs, and the lattices fold each kind
+    into the DP itself:
+
+    * ``must_use`` — via the used-resource bit mask on the state.
+    * ``exclude`` / ``pin`` — via :meth:`allowed` on states.
+    * ``max_link_bytes`` — via :meth:`transition_allowed` on hand-offs.
+    * ``max_resource_time`` — cap on a resource's total compute time.
+      Strict tier ordering means a path visits each resource at most once,
+      as one contiguous segment, so the "path-dependent" accumulated time
+      is just the open segment's span: the lattices carry the open
+      segment's start block in the state key for capped resources and
+      prune any extension whose segment time exceeds the cap in-flight.
+    * ``min_blocks_on`` — floor on the number of blocks a resource hosts
+      (a floor >= 1 also forces the resource to appear, so it joins the
+      must-use mask); enforced exactly when the segment closes.
+
+    The two path-dependent kinds used to be enforced by post-filtering
+    k-best pools, so a binding constraint could reject every pooled winner
+    and return fewer — or zero — results while a feasible optimum existed.
+    :meth:`path_feasible` remains as the whole-config reference check used
+    by the exhaustive strategy (and as the validation oracle in tests).
+    """
+
+    def __init__(self,
+                 must_use: Sequence[str] = (),
+                 exclude: Sequence[str] = (),
+                 pin: dict[int, str] | None = None,
+                 max_link_bytes: dict[tuple[str, str], float] | None = None,
+                 max_resource_time: dict[str, float] | None = None,
+                 min_blocks_on: dict[str, int] | None = None):
+        self.must_use = tuple(must_use)
+        self.exclude = frozenset(exclude)
+        self.pin = dict(pin or {})
+        self.max_link_bytes = dict(max_link_bytes or {})
+        self.max_resource_time = dict(max_resource_time or {})
+        self.min_blocks_on = dict(min_blocks_on or {})
+
+    def allowed(self, block: int, resource: str) -> bool:
+        if resource in self.exclude:
+            return False
+        pinned = self.pin.get(block)
+        return pinned is None or pinned == resource
+
+    def transition_allowed(self, src: str, dst: str, nbytes: float) -> bool:
+        limit = self.max_link_bytes.get((src, dst))
+        return limit is None or nbytes <= limit
+
+    def path_feasible(self, cfg: PartitionConfig) -> bool:
+        """Whole-config check of the path-dependent constraints — used by
+        the exhaustive strategy's filter and as the lattices' validation
+        oracle (the lattices themselves enforce these in the DP state)."""
+        for res, tmax in self.max_resource_time.items():
+            if cfg.compute_s.get(res, 0.0) > tmax:
+                return False
+        for res, nmin in self.min_blocks_on.items():
+            got = sum(s.end - s.start + 1 for s in cfg.segments
+                      if s.resource == res)
+            if got < nmin:
+                return False
+        return True
+
+
+class _LatticeBase:
+    """State shared by every lattice DP: the exclude-filtered resource
+    list, tier ordering, the must-use bit mask, and the in-DP form of the
+    path-dependent constraints.
+
+    A ``must_use`` entry (or a ``min_blocks_on`` floor >= 1, which demands
+    presence) naming a resource that is unknown or excluded is
+    **unsatisfiable**: no path can ever visit it, so ``infeasible`` is set
+    and every ``solve`` returns ``[]`` — exactly what the exhaustive
+    strategy does (it rejects every config), keeping the strategies
+    consistent instead of silently dropping the constraint.
+
+    Path-dependent constraints are exact in the DP because transitions
+    only move to strictly later tiers: a path visits each resource at most
+    once, as one contiguous segment, so a resource's total compute time
+    and block count are properties of that single segment.  A lattice that
+    works at block granularity carries the open segment's start block in
+    its state key — but only for **tracked** resources (those named by
+    ``max_resource_time`` / ``min_blocks_on``), so the state space is
+    unchanged when the constraints are absent.  ``_seg_ok`` prunes a
+    segment that exceeds its compute-time cap the moment it does (the cap
+    is monotone in the segment span), and ``_close_ok`` enforces the
+    min-block floor when the segment closes.  Both recompute the segment
+    time via ``CostModel.segment_time``, the same prefix-sum arithmetic
+    ``evaluate`` uses, so the DP and the exhaustive oracle agree bit for
+    bit on feasibility.
+    """
+
+    def __init__(self, cost: CostModel,
+                 constraints: Constraints | None = None):
+        self.cost = cost
+        self.cons = constraints or Constraints()
+        self.res = [r for r in cost.resources
+                    if r.name not in self.cons.exclude]
+        self.names = [r.name for r in self.res]
+        self.order = {r.name: r.order for r in self.res}
+        self.tmax = dict(self.cons.max_resource_time)
+        # a floor <= 0 is trivially satisfied (path_feasible accepts even
+        # an absent resource); a floor >= 1 demands presence
+        self.nmin = {n: k for n, k in self.cons.min_blocks_on.items()
+                     if k >= 1}
+        demanded = list(dict.fromkeys((*self.cons.must_use, *self.nmin)))
+        self.must = [n for n in demanded if n in self.names]
+        self.must_idx = {n: i for i, n in enumerate(self.must)}
+        self.full_mask = (1 << len(self.must)) - 1
+        self.infeasible = (
+            any(n not in self.names for n in demanded)
+            or any(k > cost.n_blocks for k in self.nmin.values()))
+
+    def _bit(self, resource: str) -> int:
+        i = self.must_idx.get(resource)
+        return 0 if i is None else 1 << i
+
+    def _mask_with(self, mask: int, resource: str) -> int:
+        return mask | self._bit(resource)
+
+    def _tracked(self, resource: str) -> bool:
+        """True when the open segment's start block must live in the state
+        key for ``resource`` (it is compute-time capped or block-floored)."""
+        return resource in self.tmax or resource in self.nmin
+
+    def _seg_ok(self, resource: str, start: int, end: int) -> bool:
+        """Segment ``start..end`` on ``resource`` within its compute-time
+        cap (trivially true for uncapped resources)."""
+        t = self.tmax.get(resource)
+        return t is None or \
+            self.cost.segment_time(resource, start, end) <= t
+
+    def _close_ok(self, resource: str, start: int, end: int) -> bool:
+        """Closing segment ``start..end`` on ``resource`` satisfies its
+        min-block floor (the time cap was enforced while it grew)."""
+        k = self.nmin.get(resource)
+        return k is None or end - start + 1 >= k
+
+
+class PartitionLattice(_LatticeBase):
+    """Viterbi over (block, resource, used-mask) with k-best extraction.
+
+    Transitions: stay on the same resource (free) or hand off to a strictly
+    later tier (pay ``comm(out_bytes[block])``).  The used-mask tracks which
+    must-use resources have been visited so 'entire pipeline' style
+    constraints stay exact, and for resources named by the path-dependent
+    constraints the state key additionally carries the open segment's start
+    block (see ``_LatticeBase``), so ``max_resource_time`` prunes in-flight
+    and ``min_blocks_on`` gates segment closes — every constraint is part
+    of the DP state and ``solve`` returns the true constrained k-best, with
+    no post-filtering.
+    """
+
+    def __init__(self, cost: CostModel, constraints: Constraints | None = None,
+                 objective: Objective = LATENCY):
+        super().__init__(cost, constraints)
+        self.obj = objective
+
+    def _step_cost(self, resource: str, block: int) -> float:
+        t = self.cost.segment_time(resource, block, block)
+        return self.obj.w_latency * t
+
+    def _comm_cost(self, src: str, dst: str, nbytes: float) -> float:
+        return (self.obj.w_latency * self.cost.comm(src, dst, nbytes)
+                + self.obj.w_transfer_per_mb * nbytes / 1e6)
+
+    @staticmethod
+    def _push(store: dict, key, entry, k: int) -> None:
+        """Bounded-sorted insertion of ``entry`` into ``store[key]``.
+
+        Entries are (score, tie, ...) tuples with a unique tie counter, so
+        tuple comparison never reaches the non-comparable tail; a full
+        re-sort per insertion (O(K log K) per relaxed edge) is replaced by
+        a rejection test plus one O(K) ``bisect.insort``.
+        """
+        lst = store.setdefault(key, [])
+        if len(lst) >= k:
+            if entry[0] >= lst[-1][0]:
+                return                   # cannot enter a full list
+            del lst[-1]
+        bisect.insort(lst, entry)
+
+    def solve(self, top_n: int = 1) -> list[PartitionConfig]:
+        """k-best paths through the lattice; returns up to ``top_n`` feasible
+        configs ranked by the objective.
+
+        Every constraint lives in the DP state, so this is the exact
+        constrained k-best: labels at the same (resource, mask, open-seg
+        start) state are interchangeable prefixes for every feasible
+        completion, hence ``K == top_n`` per state suffices and distinct
+        entries reconstruct distinct configs (a path determines its state).
+        """
+        if top_n <= 0 or self.infeasible:
+            return []
+        B = self.cost.n_blocks
+        K = top_n
+        # state (resource, mask, open-seg start | -1 if untracked) -> k-best
+        # entries; paths kept as parent pointers to bound memory: entry =
+        # (score, tie, resource, mask, parent_entry)
+        Entry = tuple  # (score, tie, resource, mask, parent)
+        frontier: dict[tuple[str, int, int], list[Entry]] = {}
+        tie = itertools.count()
+        push = self._push
+
+        for r in self.names:
+            if not self.cons.allowed(0, r) or not self._seg_ok(r, 0, 0):
+                continue
+            inp = 0.0
+            if r != self.cost.source:
+                nbytes = self.cost.batch_input_bytes
+                if not self.cons.transition_allowed(self.cost.source, r,
+                                                    nbytes):
+                    continue
+                inp = self._comm_cost(self.cost.source, r, nbytes)
+            score = inp + self._step_cost(r, 0)
+            mask = self._mask_with(0, r)
+            push(frontier, (r, mask, 0 if self._tracked(r) else -1),
+                 (score, next(tie), r, mask, None), K)
+
+        for b in range(1, B):
+            nxt: dict[tuple[str, int, int], list[Entry]] = {}
+            nbytes = float(self.cost.out_bytes[b - 1])
+            for (r, mask, start), entries in frontier.items():
+                # stay: the open segment grows through block b (prune the
+                # moment it exceeds its compute-time cap)
+                if self.cons.allowed(b, r) and \
+                        (start < 0 or self._seg_ok(r, start, b)):
+                    step = self._step_cost(r, b)
+                    for e in entries:
+                        push(nxt, (r, mask, start),
+                             (e[0] + step, next(tie), r, mask, e), K)
+                # hand off to a later tier: closes [start..b-1] on r, which
+                # must meet r's min-block floor
+                if start >= 0 and not self._close_ok(r, start, b - 1):
+                    continue
+                for r2 in self.names:
+                    if self.order[r2] <= self.order[r] or \
+                            not self.cons.allowed(b, r2) or \
+                            not self.cons.transition_allowed(r, r2, nbytes) \
+                            or not self._seg_ok(r2, b, b):
+                        continue
+                    m2 = self._mask_with(mask, r2)
+                    s2 = b if self._tracked(r2) else -1
+                    hop = self._comm_cost(r, r2, nbytes) \
+                        + self._step_cost(r2, b)
+                    for e in entries:
+                        push(nxt, (r2, m2, s2),
+                             (e[0] + hop, next(tie), r2, m2, e), K)
+            frontier = nxt
+
+        finals: list[Entry] = []
+        for (r, mask, start), entries in frontier.items():
+            if mask != self.full_mask:
+                continue
+            if start >= 0 and not self._close_ok(r, start, B - 1):
+                continue
+            finals.extend(entries)
+        finals.sort(key=lambda e: e[0])
+
+        out: list[PartitionConfig] = []
+        seen: set[tuple[Segment, ...]] = set()
+        for e in finals:
+            segs = self._reconstruct(e)
+            if segs in seen:
+                continue
+            seen.add(segs)
+            out.append(self.cost.evaluate(segs))
+            if len(out) >= top_n:
+                break
+        return out
+
+    @staticmethod
+    def _reconstruct(entry) -> tuple[Segment, ...]:
+        path: list[str] = []
+        e = entry
+        while e is not None:
+            path.append(e[2])
+            e = e[4]
+        path.reverse()
+        segs: list[Segment] = []
+        start = 0
+        for i in range(1, len(path) + 1):
+            if i == len(path) or path[i] != path[start]:
+                segs.append(Segment(path[start], start, i - 1))
+                start = i
+        return tuple(segs)
+
+
+class BottleneckLattice(_LatticeBase):
+    """Exact min-bottleneck (max-throughput) DP — the minimax companion to
+    :class:`PartitionLattice`.
+
+    Under pipelined serving the objective is ``max`` over *effective* stage
+    periods (replica- and batch-adjusted compute, per-request comm), which
+    is not additive, so the Viterbi lattice's sum-composition is not exact.
+    This DP works at *segment* granularity:
+
+        f(b, r, need) = k-best achievable bottlenecks over blocks b..B-1
+                        when block b starts a new segment on resource r and
+                        ``need`` is the set of must-use resources still owed
+
+    with minimax composition ``max(stage_period, hop_period, child)``.  Max
+    is monotone in the child value, so k-best per state is exact; replicas
+    and batch only rescale each state's local cost (the cost model's
+    ``stage_period`` / ``hop_period``), so the DP stays exact at every
+    operating point.  Complexity O(B²·R²·K·2^M) for M must-use resources.
+
+    Because this DP works at whole-segment granularity, the path-dependent
+    constraints need **no state extension at all**: every transition (and
+    every terminal) names its segment's exact extent, so
+    ``max_resource_time`` and ``min_blocks_on`` are checked per transition
+    (``_seg_ok`` / ``_close_ok``) and infeasible segments never enter the
+    lattice — ``solve`` returns the true constrained optimum with no
+    post-filtering and no pool widening.
+
+    Ties on the bottleneck value are broken by end-to-end latency across
+    the *entire* reconstruction pool (every tied final is reconstructed
+    before truncating to ``top_n``).  A tie wider than a single state's
+    k-best pool can still be cut *inside* the DP; the solver detects that
+    (a state dropped a candidate whose value ties the returned optimum)
+    and reconstructs the exact tied surface via :class:`ParetoLattice`
+    dispatch — the minimum (bottleneck, latency) point is always on the
+    Pareto frontier — so the returned optimum's latency tie-break is exact
+    regardless of pool width.
+    """
+
+    # introspection state of the last solve (class-level defaults so an
+    # early-returning solve — infeasible / top_n <= 0 — reads as no-op)
+    _tie_cut = math.inf
+    _dispatched = False
+
+    def solve(self, top_n: int = 1) -> list[PartitionConfig]:
+        if top_n <= 0 or self.infeasible:
+            return []
+        B = self.cost.n_blocks
+        # K == top_n is exact for the k-best *values*; the +head-room keeps
+        # more bottleneck-tied candidates in the pools so the latency
+        # tie-break rarely has to fall back to the Pareto dispatch below
+        K = max(top_n * 2, top_n + 2)
+        self._tie_cut = math.inf       # min value a full pool ever dropped
+        names = self.names
+        out_bytes = self.cost.out_bytes
+        # longest allowed contiguous run starting at each (resource, block)
+        run: dict[str, list[int]] = {}
+        for r in names:
+            ok = [self.cons.allowed(b, r) for b in range(B)]
+            ends = [0] * (B + 1)
+            for b in range(B - 1, -1, -1):
+                ends[b] = ends[b + 1] + 1 if ok[b] else 0
+            run[r] = ends[:B]
+
+        # memo[(b, ri, need)] = up to K (value, end, child_key, child_pos),
+        # sorted ascending; ``need`` never contains ri's own bit
+        memo: dict[tuple[int, int, int], list[tuple]] = {}
+        for b in range(B - 1, -1, -1):
+            for ri, r in enumerate(names):
+                n_run = run[r][b]
+                bit_r = self._bit(r)
+                # transitions are independent of the must-use mask — hoist
+                # the (end, r2) scan out of the need loop.  Constraints on
+                # the segment itself (compute-time cap, min-block floor)
+                # are exact here: each candidate names its segment extent.
+                term = None
+                if b + n_run >= B and self._seg_ok(r, b, B - 1) \
+                        and self._close_ok(r, b, B - 1):
+                    term = self.cost.stage_period(r, b, B - 1)
+                trans: list[tuple] = []      # (base, end, rj, clear_bit)
+                for end in range(b, min(b + n_run, B - 1)):
+                    if not self._seg_ok(r, b, end):
+                        break            # segment time is monotone in end
+                    if not self._close_ok(r, b, end):
+                        continue
+                    nbytes = float(out_bytes[end])
+                    seg_t = self.cost.stage_period(r, b, end)
+                    for rj, r2 in enumerate(names):
+                        if self.order[r2] <= self.order[r] or \
+                                not self.cons.transition_allowed(
+                                    r, r2, nbytes):
+                            continue
+                        base = max(seg_t, self.cost.hop_period(r, r2, nbytes))
+                        trans.append((base, end, rj, ~self._bit(r2)))
+                for need in range(self.full_mask + 1):
+                    if need & bit_r:
+                        continue
+                    cands: list[tuple] = []
+                    if term is not None and need == 0:
+                        cands.append((term, B - 1, None, -1))
+                    for base, end, rj, clear in trans:
+                        ck = (end + 1, rj, need & clear)
+                        child = memo.get(ck)
+                        if not child:
+                            continue
+                        for pos, ce in enumerate(child):
+                            cands.append((max(base, ce[0]), end, ck, pos))
+                    cands.sort(key=lambda t: t[0])
+                    if len(cands) > K:
+                        self._tie_cut = min(self._tie_cut, cands[K][0])
+                    memo[(b, ri, need)] = cands[:K]
+
+        finals: list[tuple[float, tuple[int, int, int], int]] = []
+        for ri, r in enumerate(names):
+            key = (0, ri, self.full_mask & ~self._bit(r))
+            entries = memo.get(key)
+            if not entries:
+                continue
+            inp = 0.0
+            if r != self.cost.source:
+                nbytes = self.cost.batch_input_bytes
+                if not self.cons.transition_allowed(
+                        self.cost.source, r, nbytes):
+                    continue
+                inp = self.cost.hop_period(self.cost.source, r, nbytes)
+            for pos in range(len(entries)):
+                finals.append((max(entries[pos][0], inp), key, pos))
+        finals.sort(key=lambda t: t[0])
+
+        # ties in bottleneck are common (e.g. the input hop dominates), so
+        # truncating the reconstruction pool before the (bottleneck,
+        # latency) tie-break could cut a lower-latency config and return a
+        # strictly worse one.  Reconstruct until we hold top_n configs AND
+        # the next candidate's value exceeds the top_n-th best bottleneck —
+        # i.e. collect every bottleneck-tied candidate first.
+        out: list[PartitionConfig] = []
+        seen: set[tuple[Segment, ...]] = set()
+        kth = math.inf                  # top_n-th smallest kept bottleneck
+        for val, key, pos in finals:
+            if len(out) >= top_n and val > kth * (1 + 1e-12) + 1e-18:
+                break
+            segs = self._reconstruct(memo, key, pos)
+            if segs in seen:
+                continue
+            seen.add(segs)
+            out.append(self.cost.evaluate(segs))
+            if len(out) >= top_n:
+                kth = sorted(c.bottleneck_s for c in out)[top_n - 1]
+        win = min((c.bottleneck_s for c in out), default=math.inf)
+        tol = win * (1 + 1e-12) + 1e-18
+        n_tied = sum(1 for c in out if c.bottleneck_s <= tol)
+        out.sort(key=lambda c: (c.bottleneck_s, c.latency_s))
+        out = out[:top_n]
+
+        # a full pool dropped a candidate that could tie the winner AND
+        # the winner genuinely ties (if a cut path tied the winner, at
+        # least two kept finals tie it too: swapping a dropped entry for a
+        # kept sibling only lowers the max-composed value, which cannot go
+        # below the global minimum — so a unique winner proves no tie was
+        # cut).  Only then is the tied surface possibly wider than the
+        # pools: reconstruct it exactly via ParetoLattice (the
+        # min-(bottleneck, latency) point is always on the Pareto
+        # frontier) and let it lead the ranking.  The double condition
+        # keeps this dispatch off the common no-tie path — suffix values
+        # exclude the prefix/input-hop floor, so ``_tie_cut`` alone
+        # under-estimates wildly and would fire on almost every solve.
+        self._dispatched = bool(out and n_tied >= 2
+                                and self._tie_cut <= tol)
+        if self._dispatched:
+            best = self._tied_surface_best(out[0].bottleneck_s)
+            if best is not None and best.segments not in seen:
+                out = [best, *out]
+                out.sort(key=lambda c: (c.bottleneck_s, c.latency_s))
+                out = out[:top_n]
+        return out
+
+    def _tied_surface_best(self, value: float) -> PartitionConfig | None:
+        """Exact min-(bottleneck, latency, transfer) config among those
+        whose bottleneck ties ``value``, via the Pareto frontier (which
+        always carries that point)."""
+        tol = value * (1 + 1e-12) + 1e-18
+        tied = [c for c in ParetoLattice(self.cost, self.cons).solve()
+                if c.bottleneck_s <= tol]
+        if not tied:
+            return None
+        return min(tied, key=lambda c: (c.bottleneck_s, c.latency_s,
+                                        c.transfer_bytes))
+
+    def _reconstruct(self, memo, key, pos) -> tuple[Segment, ...]:
+        segs: list[Segment] = []
+        start = key[0]
+        while True:
+            value, end, child_key, child_pos = memo[key][pos]
+            segs.append(Segment(self.names[key[1]], start, end))
+            if child_key is None:
+                return tuple(segs)
+            key, pos, start = child_key, child_pos, end + 1
+
+
+def _nondominated_rows(pts: np.ndarray, eps: float = 0.0) -> np.ndarray:
+    """Indices of rows of ``pts`` (every column minimised) surviving
+    dominance pruning, ascending.
+
+    Exact-duplicate rows collapse to one representative.  With ``eps == 0``
+    the filter is exact: a row is pruned iff some distinct row is <= in
+    every column.  With ``eps > 0`` a row is additionally pruned when a
+    *kept* row is within a factor (1+eps) in every column (multiplicative
+    ε-dominance, applied greedily in lexicographic order so mutually
+    ε-close rows keep exactly one representative).
+    """
+    n = len(pts)
+    if n <= 1:
+        return np.arange(n)
+    uniq, first = np.unique(pts, axis=0, return_index=True)
+    if len(uniq) <= 1024:
+        # pairwise filter: le[i, j] == row j dominates-or-equals row i;
+        # rows are distinct after np.unique, so any hit off the diagonal
+        # is strict somewhere
+        le = (uniq[None, :, :] <= uniq[:, None, :]).all(-1)
+        np.fill_diagonal(le, False)
+        alive = ~le.any(axis=1)
+        uniq, first = uniq[alive], first[alive]
+    if eps > 0.0 or len(uniq) > 1024:
+        # sequential sweep in lexicographic order: every exact dominator of
+        # a row sorts before it, so checking against kept rows is exact at
+        # eps == 0 and the canonical greedy archive at eps > 0 (pre-pruning
+        # exact-dominated rows above cannot hurt coverage — any dominator
+        # of a pruned row is itself within the ε bound of a kept row)
+        scale = 1.0 + eps
+        kept = np.empty_like(uniq)
+        kcount = 0
+        keep_list: list[int] = []
+        for u, i in zip(uniq, first):
+            if kcount and (kept[:kcount] <= u * scale).all(axis=1).any():
+                continue
+            kept[kcount] = u
+            kcount += 1
+            keep_list.append(int(i))
+        first = np.asarray(keep_list, dtype=np.intp)
+    return np.sort(first)
+
+
+class ParetoLattice(_LatticeBase):
+    """Exact Pareto-frontier extraction over (latency, bottleneck, transfer).
+
+    A label-correcting DP over the same (block, resource, must-use-mask)
+    states as :class:`PartitionLattice`, except each state keeps its full
+    **non-dominated set** of vector labels
+
+        (latency_so_far, bottleneck_of_closed_stages, transfer_so_far,
+         open_segment_time)
+
+    instead of a scalar k-best list.  Latency and transfer compose
+    additively, the closed-stage bottleneck by minimax, and the open
+    segment's eventual stage period is monotone in its accumulated time —
+    all monotone operators — so per-state dominance pruning is exact: no
+    genuinely non-dominated operating point can be lost, which the
+    three-objective k-best union used by ``QueryEngine.frontier`` before
+    this class could not guarantee.  Distinct paths with identical labels
+    collapse to one representative, so the result carries one config per
+    frontier *vector* (the exhaustive oracle may hold several tied
+    configs with equal objectives).
+
+    ``epsilon`` > 0 enables multiplicative ε-dominance pruning to bound
+    label-set growth on fleet-sized spaces: a label is also dropped when a
+    kept label is within a factor (1+ε) in every component.  Relative
+    error composes through the additive/minimax operators, so every
+    exact-front point has a returned point within (1+ε)^S of it in every
+    objective (S = blocks on the path; far tighter in practice).  The
+    default 0.0 is exact.  ``labels_kept`` / ``labels_pruned`` record the
+    label-set statistics across all states of the last :meth:`solve`.
+
+    Constraints: ``must_use`` (via the mask), ``exclude``/``pin`` (via
+    ``allowed``) and ``max_link_bytes`` (via ``transition_allowed``) are
+    exact in the DP, and so are the path-dependent ``max_resource_time`` /
+    ``min_blocks_on``: for resources they name, the state key carries the
+    open segment's start block (see ``_LatticeBase``), so over-cap
+    extensions are pruned the moment they occur and under-floor segment
+    closes are rejected — labels within a state remain interchangeable
+    prefixes and dominance pruning stays exact.  The split states' label
+    sets rejoin in the global non-dominated filter over completed vectors,
+    so the returned frontier is the true constrained frontier with no
+    post-filtering (the exhaustive strategy remains the validation
+    oracle).
+    """
+
+    def __init__(self, cost: CostModel,
+                 constraints: Constraints | None = None,
+                 epsilon: float = 0.0):
+        if epsilon < 0.0:
+            raise ValueError(f"epsilon must be >= 0, got {epsilon}")
+        super().__init__(cost, constraints)
+        self.epsilon = float(epsilon)
+        self.labels_kept = 0
+        self.labels_pruned = 0
+
+    def _div(self, resource: str) -> float:
+        """Per-request divisor of a compute stage on ``resource`` — the
+        label's open-segment time over this is its eventual stage period."""
+        return self.cost.replicas_for(resource) * self.cost.batch_size
+
+    def solve(self) -> list[PartitionConfig]:
+        """The exact (ε = 0) non-dominated set of configurations, sorted by
+        (latency, bottleneck, transfer)."""
+        cost = self.cost
+        B = cost.n_blocks
+        self.labels_kept = self.labels_pruned = 0
+        if self.infeasible:
+            return []
+        # state (resource, mask, open-seg start | -1 if untracked) ->
+        # ((L, 4) label array, parallel [(prev_key, prev_idx)])
+        cur: dict[tuple[str, int, int], tuple[np.ndarray, list]] = {}
+        for r in self.names:
+            if not self.cons.allowed(0, r) or not self._seg_ok(r, 0, 0):
+                continue
+            lat = bneck = xfer = 0.0
+            if r != cost.source:
+                nbytes = cost.batch_input_bytes
+                if not self.cons.transition_allowed(cost.source, r, nbytes):
+                    continue
+                lat = cost.comm(cost.source, r, nbytes)
+                bneck = cost.hop_period(cost.source, r, nbytes)
+                xfer = nbytes
+            step = cost.segment_time(r, 0, 0)
+            key = (r, self._mask_with(0, r), 0 if self._tracked(r) else -1)
+            cur[key] = (
+                np.array([[lat + step, bneck, xfer, step]]), [(None, -1)])
+        hist = [cur]
+        for b in range(1, B):
+            nbytes = float(cost.out_bytes[b - 1])
+            groups: dict[tuple[str, int, int], list] = {}
+            for (r, mask, start), (arr, metas) in cur.items():
+                refs = [((r, mask, start), i) for i in range(len(metas))]
+                if self.cons.allowed(b, r) and \
+                        (start < 0 or self._seg_ok(r, start, b)):
+                    # extend the open segment (pruned the moment it would
+                    # exceed its compute-time cap)
+                    step = cost.segment_time(r, b, b)
+                    groups.setdefault((r, mask, start), []).append(
+                        (arr + np.array([step, 0.0, 0.0, step]), refs))
+                if start >= 0 and not self._close_ok(r, start, b - 1):
+                    continue               # closing would violate the floor
+                div = self._div(r)
+                for r2 in self.names:              # close it and hand off
+                    if self.order[r2] <= self.order[r] or \
+                            not self.cons.allowed(b, r2) or \
+                            not self.cons.transition_allowed(r, r2, nbytes) \
+                            or not self._seg_ok(r2, b, b):
+                        continue
+                    hop = cost.comm(r, r2, nbytes)
+                    hop_p = cost.hop_period(r, r2, nbytes)
+                    step2 = cost.segment_time(r2, b, b)
+                    a2 = np.empty_like(arr)
+                    a2[:, 0] = arr[:, 0] + (hop + step2)
+                    a2[:, 1] = np.maximum(
+                        np.maximum(arr[:, 1], arr[:, 3] / div), hop_p)
+                    a2[:, 2] = arr[:, 2] + nbytes
+                    a2[:, 3] = step2
+                    key2 = (r2, self._mask_with(mask, r2),
+                            b if self._tracked(r2) else -1)
+                    groups.setdefault(key2, []).append((a2, refs))
+            cur = {}
+            for key, chunks in groups.items():
+                arr = chunks[0][0] if len(chunks) == 1 else \
+                    np.concatenate([c[0] for c in chunks])
+                metas = [m for c in chunks for m in c[1]]
+                keep = _nondominated_rows(arr, self.epsilon)
+                self.labels_kept += len(keep)
+                self.labels_pruned += len(arr) - len(keep)
+                cur[key] = (arr[keep], [metas[i] for i in keep])
+            hist.append(cur)
+
+        # close every final open segment and filter the completed vectors
+        # (states split by open-seg start rejoin here: the filter is global)
+        finals: list[tuple[tuple[str, int, int], int]] = []
+        vecs: list[np.ndarray] = []
+        for (r, mask, start), (arr, metas) in cur.items():
+            if mask != self.full_mask:
+                continue
+            if start >= 0 and not self._close_ok(r, start, B - 1):
+                continue
+            vec = np.empty((len(arr), 3))
+            vec[:, 0] = arr[:, 0]
+            vec[:, 1] = np.maximum(arr[:, 1], arr[:, 3] / self._div(r))
+            vec[:, 2] = arr[:, 2]
+            for i in range(len(arr)):
+                finals.append(((r, mask, start), i))
+                vecs.append(vec[i])
+        if not finals:
+            return []
+        keep = _nondominated_rows(np.stack(vecs), 0.0)
+        out: list[PartitionConfig] = []
+        seen: set[tuple[Segment, ...]] = set()
+        for i in keep:
+            key, idx = finals[i]
+            segs = self._reconstruct(hist, key, idx)
+            if segs in seen:
+                continue
+            seen.add(segs)
+            out.append(cost.evaluate(segs))
+        # authoritative re-filter on the re-evaluated configs: the DP's
+        # label arithmetic accumulates sums incrementally while evaluate()
+        # uses prefix-sum differences, and evaluate() is the single source
+        # of truth for the objective vectors
+        out = pareto_frontier(out)
+        out.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
+                                c.transfer_bytes))
+        return out
+
+    def _reconstruct(self, hist, key, idx) -> tuple[Segment, ...]:
+        path: list[str] = []
+        for b in range(len(hist) - 1, -1, -1):
+            path.append(key[0])
+            key, idx = hist[b][key][1][idx]
+        path.reverse()
+        segs: list[Segment] = []
+        start = 0
+        for i in range(1, len(path) + 1):
+            if i == len(path) or path[i] != path[start]:
+                segs.append(Segment(path[start], start, i - 1))
+                start = i
+        return tuple(segs)

@@ -1,0 +1,314 @@
+"""SPSolver — the exact DP over a series-parallel decomposition tree.
+
+The chain lattices walk blocks left to right with a single open tensor;
+this engine walks the :class:`~repro.core.graph.SPNode` tree instead:
+
+* **series** composition is exactly the chain transition — extend the
+  open tail block's label by the next leaf, paying per-edge comm on every
+  crossing edge (a join leaf pays one comm term per incoming branch: the
+  "cut crossed by k tensors transfers the sum of edge bytes" rule);
+* **parallel** composition solves each branch *relative* to the fork
+  label (cached per fork resource) and merges the per-branch label sets:
+  latencies concatenate (one column per open tail — the max is deferred
+  to the join leaf, which is where branch finish times actually meet),
+  transfer and per-resource compute times add, hop bottlenecks max.
+
+A label is a vector over monotone-composing components
+
+    (finish time per open tail, hop-period max, transfer bytes,
+     per-resource compute time T_r ..., −blocks hosted per floored
+     resource ...)
+
+grouped by state ``(open tails with their resources, must-use mask)``.
+Within a state every component composes monotonically into any completion
+(critical-path latency is max/+ in each tail finish; the pipelined
+bottleneck is monotone in each ``T_r`` and the hop max; feasibility of
+``max_resource_time`` is monotone in ``T_r``, ``min_blocks_on``
+anti-monotone in the block counts — hence the negation), so per-state
+dominance pruning is exact: the top-1 solve and the frontier match the
+DAG-aware exhaustive oracle label-for-label, constraints included
+(``max_resource_time`` prunes in-flight, ``min_blocks_on`` gates
+finalisation, ``pin``/``exclude``/``max_link_bytes`` gate transitions,
+``must_use`` lives in the mask).
+
+k-best beyond the winner uses widened retention (non-dominated set ∪ the
+per-state top-k by an objective proxy).  Unlike the chain
+:class:`PartitionLattice`, that is not provably exact for ``top_n > 1``
+on DAGs — a scalar score does not order multi-tail prefixes — so ranked
+tails beyond the top-1 are best-effort; the query engine's exhaustive
+strategy remains the ground truth there.
+
+Carried resources: because parallel branches are *unordered*, a resource
+may receive blocks from several branches, so — unlike the chain lattices,
+which exploit strict tier ordering to close segments eagerly — each label
+carries the full per-resource time vector.  That costs label-set width on
+large fleets; chain-shaped models keep using the chain lattices, which
+are untouched.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .chain import (Constraints, LATENCY, Objective, ThroughputObjective,
+                    _LatticeBase, _nondominated_rows, pareto_frontier, rank)
+from .dag import DagCostModel, DagPartitionConfig
+
+
+class SPSolver(_LatticeBase):
+    """Exact partitioning DP over a block DAG's SP decomposition tree."""
+
+    def __init__(self, cost: DagCostModel,
+                 constraints: Constraints | None = None,
+                 epsilon: float = 0.0):
+        if epsilon < 0.0:
+            raise ValueError(f"epsilon must be >= 0, got {epsilon}")
+        super().__init__(cost, constraints)
+        self.epsilon = float(epsilon)
+        self.preds = cost.block_preds
+        tree = getattr(cost, "tree", None)
+        if tree is None:
+            from ..graph import SPNode
+            tree = SPNode("series", children=[
+                SPNode("leaf", block=i) for i in range(cost.n_blocks)])
+        self.tree = tree
+        self.ridx = {n: i for i, n in enumerate(self.names)}
+        self.floored = [n for n in self.names if n in self.nmin]
+        self.fidx = {n: i for i, n in enumerate(self.floored)}
+        self.R = len(self.names)
+        self.F = len(self.floored)
+        self.labels_kept = 0
+        self.labels_pruned = 0
+        self._retain = 0
+        self._proxy = None
+
+    # -- label geometry ----------------------------------------------------
+    # a state's array has m = len(tails) leading latency columns, then
+    # [bmax, xfer, T_0..T_{R-1}, -cnt_0..-cnt_{F-1}]
+    def _width(self, m: int) -> int:
+        return m + 2 + self.R + self.F
+
+    def _proxy_for(self, objective: Objective):
+        div = np.array([self.cost.replicas_for(n) * self.cost.batch_size
+                        for n in self.names])
+
+        def proxy(arr: np.ndarray) -> np.ndarray:
+            m = arr.shape[1] - 2 - self.R - self.F
+            lat = arr[:, :m].max(axis=1) if m else np.zeros(len(arr))
+            if isinstance(objective, ThroughputObjective):
+                return np.maximum(arr[:, m],
+                                  (arr[:, m + 2:m + 2 + self.R] / div).max(1))
+            return (objective.w_latency * lat
+                    + objective.w_transfer_per_mb * arr[:, m + 1] / 1e6)
+
+        return proxy
+
+    def _prune_group(self, arr: np.ndarray, assigns: list) -> tuple[np.ndarray, list]:
+        keep = _nondominated_rows(arr, self.epsilon)
+        if self._retain > 1 and self._proxy is not None and len(keep) < len(arr):
+            extra = np.argsort(self._proxy(arr), kind="stable")[:self._retain]
+            keep = np.unique(np.concatenate([keep, extra]))
+        self.labels_kept += len(keep)
+        self.labels_pruned += len(arr) - len(keep)
+        return arr[keep], [assigns[i] for i in keep]
+
+    # -- tree walk ---------------------------------------------------------
+    def _run_series(self, node, states: dict) -> dict:
+        for child in node.children:
+            if not states:
+                return states
+            if child.kind == "leaf":
+                states = self._leaf(child.block, states)
+            elif child.kind == "parallel":
+                states = self._parallel(child, states)
+            else:
+                states = self._run_series(child, states)
+        return states
+
+    def _leaf(self, b: int, states: dict) -> dict:
+        cost, cons = self.cost, self.cons
+        P = list(self.preds[b])
+        t_by_r = {r: cost.segment_time(r, b, b) for r in self.names}
+        out: dict = {}
+        for (tails, mask), (arr, assigns) in states.items():
+            if b > 0 and {u for u, _ in tails} != set(P):
+                raise ValueError(
+                    f"SP tree out of sync with block edges at block {b}: "
+                    f"open tails {sorted(u for u, _ in tails)} vs preds {P}")
+            cols = {u: j for j, (u, _) in enumerate(tails)}
+            res_of = {u: ru for u, ru in tails}
+            m = len(tails)
+            L = len(arr)
+            for r in self.names:
+                if not cons.allowed(b, r):
+                    continue
+                inp = bneck0 = x0 = 0.0
+                if b == 0 and r != cost.source:
+                    nb = cost.batch_input_bytes
+                    if not cons.transition_allowed(cost.source, r, nb):
+                        continue
+                    inp = cost.comm(cost.source, r, nb)
+                    bneck0 = cost.hop_period(cost.source, r, nb)
+                    x0 = nb
+                ok = True
+                terms = []          # (column, comm seconds)
+                hop_max = bneck0
+                nbytes_sum = x0
+                for u in P:
+                    ru = res_of[u]
+                    if ru == r:
+                        terms.append((cols[u], 0.0))
+                        continue
+                    if self.order[r] <= self.order[ru]:
+                        ok = False
+                        break
+                    nb = float(cost.out_bytes[u])
+                    if not cons.transition_allowed(ru, r, nb):
+                        ok = False
+                        break
+                    terms.append((cols[u], cost.comm(ru, r, nb)))
+                    hop_max = max(hop_max, cost.hop_period(ru, r, nb))
+                    nbytes_sum += nb
+                if not ok:
+                    continue
+                t = t_by_r[r]
+                ri = self.ridx[r]
+                tcap = self.tmax.get(r)
+                if tcap is not None and t > tcap:
+                    continue
+                new = np.empty((L, self._width(1)))
+                if terms:
+                    new[:, 0] = np.max(
+                        np.stack([arr[:, j] + c for j, c in terms], axis=1),
+                        axis=1) + t
+                else:
+                    new[:, 0] = inp + t
+                new[:, 1] = np.maximum(arr[:, m], hop_max)
+                new[:, 2] = arr[:, m + 1] + nbytes_sum
+                new[:, 3:] = arr[:, m + 2:]
+                new[:, 3 + ri] += t
+                rows = np.arange(L)
+                if tcap is not None:
+                    rows = rows[new[rows, 3 + ri] <= tcap]
+                    if not len(rows):
+                        continue
+                if r in self.fidx:
+                    new[:, 3 + self.R + self.fidx[r]] -= 1.0
+                key = (((b, r),), self._mask_with(mask, r))
+                prev = out.get(key)
+                add_assigns = [assigns[i] + (r,) for i in rows]
+                if prev is None:
+                    out[key] = (new[rows], add_assigns)
+                else:
+                    out[key] = (np.concatenate([prev[0], new[rows]]),
+                                prev[1] + add_assigns)
+        return {k: self._prune_group(a, s) for k, (a, s) in out.items()}
+
+    def _parallel(self, node, states: dict) -> dict:
+        cache: dict = {}
+        out: dict = {}
+        for (tails, mask), (arr, assigns) in states.items():
+            if len(tails) != 1:
+                raise ValueError("parallel node entered with >1 open tail")
+            f, rf = tails[0]
+            results = []
+            for bi, branch in enumerate(node.children):
+                ck = (bi, rf)
+                if ck not in cache:
+                    seed = {(((f, rf),), 0):
+                            (np.zeros((1, self._width(1))), [()])}
+                    cache[ck] = self._run_series(branch, seed)
+                results.append(cache[ck])
+            if not all(results):
+                continue
+            L0 = len(arr)
+            for combo in itertools.product(
+                    *[list(br.items()) for br in results]):
+                bmask = mask
+                for (_, bm), _ in combo:
+                    bmask |= bm
+                # one open tail per branch exit (+ the fork when a direct
+                # fork→join edge keeps its tensor alive)
+                tail_list = [bts[0] for (bts, _), _ in combo]
+                if node.direct:
+                    tail_list.append((f, rf))
+                order = np.argsort([u for u, _ in tail_list], kind="stable")
+                new_tails = tuple(tail_list[i] for i in order)
+                key = (new_tails, bmask)
+                k = len(combo)
+                for rows in itertools.product(
+                        *[range(len(ba)) for (_, (ba, _)) in combo]):
+                    brows = [combo[j][1][0][rows[j]] for j in range(k)]
+                    bassigns = tuple(combo[j][1][1][rows[j]]
+                                     for j in range(k))
+                    mlen = len(tail_list)
+                    new = np.empty((L0, self._width(mlen)))
+                    lat_cols = []
+                    for j in range(k):
+                        lat_cols.append(arr[:, 0] + brows[j][0])
+                    if node.direct:
+                        lat_cols.append(arr[:, 0])
+                    for dst, srcidx in enumerate(order):
+                        new[:, dst] = lat_cols[srcidx]
+                    bm_rel = max(br[1] for br in brows)
+                    new[:, mlen] = np.maximum(arr[:, 1], bm_rel)
+                    new[:, mlen + 1] = arr[:, 2] + sum(br[2] for br in brows)
+                    tail_block = new[:, mlen + 2:]
+                    tail_block[:] = arr[:, 3:]
+                    for br in brows:
+                        tail_block += br[3:]
+                    keep = np.arange(L0)
+                    for rn, cap in self.tmax.items():
+                        c = mlen + 2 + self.ridx[rn]
+                        keep = keep[new[keep, c] <= cap]
+                        if not len(keep):
+                            break
+                    if not len(keep):
+                        continue
+                    badd = ()
+                    for a in bassigns:
+                        badd = badd + a
+                    add_assigns = [assigns[i] + badd for i in keep]
+                    prev = out.get(key)
+                    if prev is None:
+                        out[key] = (new[keep], add_assigns)
+                    else:
+                        out[key] = (np.concatenate([prev[0], new[keep]]),
+                                    prev[1] + add_assigns)
+        return {k: self._prune_group(a, s) for k, (a, s) in out.items()}
+
+    # -- entry points ------------------------------------------------------
+    def _finals(self) -> list[tuple]:
+        self.labels_kept = self.labels_pruned = 0
+        if self.infeasible:
+            return []
+        seed = {((), 0): (np.zeros((1, self._width(0))), [()])}
+        states = self._run_series(self.tree, seed)
+        finals: list[tuple] = []
+        for (tails, mask), (arr, assigns) in states.items():
+            if mask != self.full_mask:
+                continue
+            ok = np.ones(len(arr), dtype=bool)
+            for rn, floor in self.nmin.items():
+                c = len(tails) + 2 + self.R + self.fidx[rn]
+                ok &= arr[:, c] <= -float(floor)
+            finals.extend(assigns[i] for i in np.nonzero(ok)[0])
+        return list(dict.fromkeys(finals))
+
+    def solve(self, objective: Objective = LATENCY,
+              top_n: int = 1) -> list[DagPartitionConfig]:
+        """Ranked feasible configs; the winner is exact (see module doc)."""
+        self._retain = max(1, int(top_n))
+        self._proxy = self._proxy_for(objective)
+        configs = [self.cost.evaluate_assignment(a) for a in self._finals()]
+        return rank(configs, objective, top_n)
+
+    def frontier(self) -> list[DagPartitionConfig]:
+        """The exact (ε = 0) non-dominated set over (latency, bottleneck,
+        transfer); ε > 0 applies the same ε-dominance as ParetoLattice."""
+        self._retain = 0
+        self._proxy = None
+        configs = [self.cost.evaluate_assignment(a) for a in self._finals()]
+        return pareto_frontier(configs)

@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 
 from .bench import (BenchmarkDB, BenchmarkProvider, TimingProvider,
                     benchmark_batches, benchmark_model)
-from .graph import LayerGraph, fuse_blocks
+from .graph import BlockDag, LayerGraph, fuse_block_dag, fuse_blocks
 from .network import NetworkModel
 from .partition import PartitionConfig
 from .query import Query, QueryEngine, QueryResult
@@ -35,6 +35,10 @@ class Scission:
     def __post_init__(self):
         self._dbs: dict[str, BenchmarkDB] = {}
         self._engines: dict[tuple[str, float], QueryEngine] = {}
+        # models benchmarked with dag=True: their BlockDag (block-level
+        # edges + SP decomposition tree), handed to every query engine so
+        # solves run the DAG-general paths
+        self._dags: dict[str, BlockDag] = {}
 
     # -- Steps 1-3 -----------------------------------------------------------
     def _set_db(self, db: BenchmarkDB) -> None:
@@ -45,12 +49,35 @@ class Scission:
         self._engines = {k: v for k, v in self._engines.items()
                          if k[0] != db.model}
 
+    def _blocks_for(self, graph: LayerGraph):
+        """The block structure queries for this model run over: the stored
+        BlockDag when the model was benchmarked with ``dag=True`` (indices
+        must line up with the DB records), plain chain fusing otherwise."""
+        dag = self._dags.get(graph.name)
+        return dag if dag is not None else fuse_blocks(graph)
+
     def benchmark(self, graph: LayerGraph,
-                  batch_sizes: tuple[int, ...] = (1,)) -> BenchmarkDB:
+                  batch_sizes: tuple[int, ...] = (1,),
+                  dag: bool = False) -> BenchmarkDB:
         """Steps 1-3.  ``batch_sizes`` > (1,) records a batch profile per
-        (block, resource) so throughput queries can price batched stages."""
+        (block, resource) so throughput queries can price batched stages.
+
+        ``dag=True`` fuses with :func:`fuse_block_dag` — parallel regions
+        of the layer graph survive as block-level branches, and every query
+        for this model runs the DAG-general partitioner (SP-decomposition
+        DP / DAG-aware exhaustive) instead of the chain engines.  On a
+        purely linear graph the two fusings are identical and queries stay
+        on the chain paths.
+        """
+        if dag:
+            blocks = fuse_block_dag(graph)
+            self._dags[graph.name] = blocks
+        else:
+            self._dags.pop(graph.name, None)
+            blocks = fuse_blocks(graph)
         db = benchmark_model(graph, self.resources, self.provider,
-                             runs=self.runs, batch_sizes=batch_sizes)
+                             runs=self.runs, batch_sizes=batch_sizes,
+                             blocks=blocks)
         self._set_db(db)
         return db
 
@@ -69,7 +96,8 @@ class Scission:
             batch_sizes = tuple(db.measured_batches(
                 [r.name for r in self.resources])) if db is not None else (1,)
         new = benchmark_model(graph, [resource], self.provider,
-                              runs=self.runs, batch_sizes=batch_sizes)
+                              runs=self.runs, batch_sizes=batch_sizes,
+                              blocks=self._blocks_for(graph))
         if db is None:
             self._set_db(new)
             return new
@@ -86,7 +114,8 @@ class Scission:
         if db is None:
             return self.benchmark(graph, batch_sizes=batch_sizes)
         benchmark_batches(db, graph, self.resources, self.provider,
-                          runs=self.runs, batch_sizes=batch_sizes)
+                          runs=self.runs, batch_sizes=batch_sizes,
+                          blocks=self._blocks_for(graph))
         self._set_db(db)
         return db
 
@@ -107,9 +136,12 @@ class Scission:
     def engine(self, model: str, input_bytes: float) -> QueryEngine:
         key = (model, float(input_bytes))
         if key not in self._engines:
+            dag = self._dags.get(model)
             self._engines[key] = QueryEngine(
                 self._dbs[model], self.resources, self.network,
-                source=self.source, input_bytes=input_bytes)
+                source=self.source, input_bytes=input_bytes,
+                block_preds=dag.preds if dag is not None else None,
+                sp_tree=dag.tree if dag is not None else None)
         return self._engines[key]
 
     def query(self, model: str, query: Query | None = None,
@@ -147,6 +179,7 @@ class Scission:
         s = Scission(resources=resources, network=self.network,
                      source=self.source, provider=self.provider,
                      runs=self.runs)
+        s._dags = dict(self._dags)
         names = {r.name for r in resources}
         for model, db in self._dbs.items():
             kept = {r: recs for r, recs in db.records.items() if r in names}

@@ -32,11 +32,14 @@ from dataclasses import dataclass, field, replace
 
 from .bench import BenchmarkDB
 from .network import NetworkModel
-from .partition import (BottleneckLattice, Constraints, CostModel, Objective,
+from .partition import (BottleneckLattice, Constraints, CostModel,
+                        DagCostModel, Objective,
                         ThroughputObjective, LATENCY,
                         ParetoLattice, PartitionConfig, PartitionLattice,
-                        enumerate_partitions, ordered_pipelines,
-                        pareto_frontier, rank, trim_replicas)
+                        SPSolver, dag_config_satisfies, dag_search_space,
+                        enumerate_dag_partitions, enumerate_partitions,
+                        ordered_pipelines, pareto_frontier, rank,
+                        trim_replicas)
 from .resources import Resource
 
 EXHAUSTIVE_LIMIT = 200_000
@@ -154,12 +157,22 @@ class QueryEngine:
     """Step 6 over one (model benchmark DB, resource set, network)."""
 
     def __init__(self, db: BenchmarkDB, resources: list[Resource],
-                 network: NetworkModel, source: str, input_bytes: float):
+                 network: NetworkModel, source: str, input_bytes: float,
+                 block_preds: list | None = None, sp_tree=None):
         self.db = db
         self.resources = resources
         self.network = network
         self.source = source
         self.input_bytes = input_bytes
+        # DAG mode: block-level edges (BlockDag.preds) + the SP
+        # decomposition tree.  A chain-shaped (or absent) block_preds keeps
+        # every solve on the untouched chain code paths, bit-identically.
+        self.block_preds = [list(p) for p in block_preds] \
+            if block_preds is not None else None
+        self.sp_tree = sp_tree
+        self.is_dag = (self.block_preds is not None and any(
+            ps != ([] if i == 0 else [i - 1])
+            for i, ps in enumerate(self.block_preds)))
         # cost models and enumeration caches are per operating point
         # (batch size, replica budget) — the batch-1 single-replica model
         # stays constructed eagerly as the legacy `.cost` view
@@ -180,10 +193,20 @@ class QueryEngine:
         key = self._point_key(batch, reps)
         cost = _cache_get(self._costs, key)
         if cost is None:
-            cost = _cache_put(self._costs, key, CostModel(
-                db=self.db, resources=self.resources, network=self.network,
-                source=self.source, input_bytes=self.input_bytes,
-                batch_size=batch, replica_budget=reps))
+            if self.is_dag:
+                cost = DagCostModel(
+                    db=self.db, resources=self.resources,
+                    network=self.network, source=self.source,
+                    input_bytes=self.input_bytes, batch_size=batch,
+                    replica_budget=reps, block_preds=self.block_preds,
+                    tree=self.sp_tree)
+            else:
+                cost = CostModel(
+                    db=self.db, resources=self.resources,
+                    network=self.network, source=self.source,
+                    input_bytes=self.input_bytes,
+                    batch_size=batch, replica_budget=reps)
+            cost = _cache_put(self._costs, key, cost)
         return cost
 
     def _frontier_batches(self, query: Query) -> list[int]:
@@ -219,18 +242,63 @@ class QueryEngine:
             if all(n in order for n in p)
             and all(order[a] < order[b] for a, b in zip(p, p[1:])))
 
-    def _search_space(self, query: Query | None = None) -> int:
-        """Number of configurations the query actually ranges over — honors
-        a ``Query.pipelines`` restriction."""
-        B = self.db.n_blocks
+    def _admissible_pipes(self, query: Query | None = None
+                          ) -> tuple[tuple[str, ...], ...]:
+        """The pipelines the query can actually draw configs from: the
+        valid ordered pipelines (or the query's ``pipelines`` restriction)
+        that contain every *demanded* resource — ``must_use``, a
+        ``min_blocks_on`` floor >= 1 (presence implied) or a ``pin``
+        target — and avoid every excluded one.  Configs from any other
+        pipe are rejected by the constraint filter anyway, so restricting
+        enumeration (and the counted search space) to these pipes changes
+        no result — it only makes the exhaustive strategy's cost, and the
+        exhaustive/lattice crossover decision, reflect the constrained
+        query actually being answered."""
         pipes = ordered_pipelines(self.resources) \
             if query is None or query.pipelines is None \
             else self._valid_pipelines(query.pipelines)
+        if query is None:
+            return tuple(pipes)
+        need = set(query.must_use) | set(query.pin.values()) | {
+            r for r, n in query.min_blocks_on.items() if n >= 1}
+        excl = set(query.exclude)
+        return tuple(p for p in pipes
+                     if need <= set(p) and not (set(p) & excl))
+
+    def _search_space(self, query: Query | None = None) -> int:
+        """Number of configurations the query actually ranges over — honors
+        a ``Query.pipelines`` restriction and the pipe-level implications
+        of the query's constraints (see :meth:`_admissible_pipes`)."""
+        if self.is_dag:
+            cons = query.constraints() if query is not None else Constraints()
+            pipes = None if query is None or query.pipelines is None \
+                else self._admissible_pipes(query)
+            return self._dag_space(cons, pipes)
+        B = self.db.n_blocks
         total = 0
-        for pipe in pipes:
+        for pipe in self._admissible_pipes(query):
             k = len(pipe)
             if k <= B:
                 total += math.comb(B - 1, k - 1)
+        return total
+
+    def _dag_space(self, cons: Constraints,
+                   pipes: tuple[tuple[str, ...], ...] | None) -> int:
+        """Counted tier-monotone assignment space of a DAG engine, with an
+        early cutoff just past the crossover limit."""
+        cost = self.cost
+        if pipes is None:
+            return dag_search_space(cost, cons, limit=EXHAUSTIVE_LIMIT)
+        all_names = {r.name for r in self.resources}
+        total = 0
+        for pipe in pipes:
+            pcons = Constraints(
+                must_use=pipe,
+                exclude=tuple(set(cons.exclude) | (all_names - set(pipe))),
+                pin=cons.pin)
+            total += dag_search_space(cost, pcons, limit=EXHAUSTIVE_LIMIT)
+            if total > EXHAUSTIVE_LIMIT:
+                break
         return total
 
     # -- execution ----------------------------------------------------------
@@ -242,6 +310,9 @@ class QueryEngine:
         if self._search_space(query) <= EXHAUSTIVE_LIMIT:
             configs = self._run_exhaustive(query, cons, cost)
             strategy = "exhaustive"
+        elif self.is_dag:
+            configs = self._run_sp(query, cons, cost)
+            strategy = "lattice"
         else:
             configs = self._run_lattice(query, cons, cost)
             strategy = "lattice"
@@ -352,10 +423,23 @@ class QueryEngine:
         spaces are fine — the caller Pareto-filters the deduped union).
         Returns (configs, labels_kept, labels_pruned)."""
         eps = query.frontier_epsilon
+        if self.is_dag:
+            if query.pipelines is None:
+                solver = SPSolver(cost, cons, epsilon=eps)
+                return (solver.frontier(), solver.labels_kept,
+                        solver.labels_pruned)
+            merged: list[PartitionConfig] = []
+            kept = pruned = 0
+            for pcons in self._pipe_constraints(query):
+                solver = SPSolver(cost, pcons, epsilon=eps)
+                merged.extend(solver.frontier())
+                kept += solver.labels_kept
+                pruned += solver.labels_pruned
+            return merged, kept, pruned
         if query.pipelines is None:
             lattice = ParetoLattice(cost, cons, epsilon=eps)
             return lattice.solve(), lattice.labels_kept, lattice.labels_pruned
-        merged: list[PartitionConfig] = []
+        merged = []
         kept = pruned = 0
         for pcons in self._pipe_constraints(query):
             lattice = ParetoLattice(cost, pcons, epsilon=eps)
@@ -408,6 +492,20 @@ class QueryEngine:
                           .solve(top_n=query.top_n))
         return rank(_dedupe(merged), query.objective, query.top_n)
 
+    def _run_sp(self, query: Query, cons: Constraints,
+                cost: CostModel) -> list[PartitionConfig]:
+        """Large-space DAG solve via :class:`SPSolver` (the DAG analogue of
+        ``_run_lattice``, objective handling included — the solver's label
+        vectors carry both the additive and the bottleneck components)."""
+        if query.pipelines is None:
+            return SPSolver(cost, cons).solve(query.objective,
+                                              top_n=query.top_n)
+        merged: list[PartitionConfig] = []
+        for pcons in self._pipe_constraints(query):
+            merged.extend(SPSolver(cost, pcons).solve(query.objective,
+                                                      top_n=query.top_n))
+        return rank(_dedupe(merged), query.objective, query.top_n)
+
     def _run_exhaustive(self, query: Query, cons: Constraints,
                         cost: CostModel) -> list[PartitionConfig]:
         return rank(self._filtered_exhaustive(query, cons, cost),
@@ -415,18 +513,21 @@ class QueryEngine:
 
     def _filtered_exhaustive(self, query: Query, cons: Constraints,
                              cost: CostModel) -> list[PartitionConfig]:
+        if self.is_dag:
+            return self._dag_filtered(query, cons, cost)
         point = self._point_key(query.batch_size, query.replicas)
-        if query.pipelines is not None and \
-                self._search_space() > EXHAUSTIVE_LIMIT:
-            # only the restricted space is small — enumerate just those
-            # pipelines instead of building the full cache (cached per
-            # pipeline set so repeated queries stay inside the 50 ms budget)
-            pipes = self._valid_pipelines(query.pipelines)
-            ck = (point, pipes)
+        admissible = self._admissible_pipes(query)
+        if self._search_space() > EXHAUSTIVE_LIMIT:
+            # only the constrained space is small — enumerate just the
+            # admissible pipelines instead of building the full cache
+            # (cached per pipeline set so repeated queries stay inside the
+            # 50 ms budget)
+            ck = (point, admissible)
             pool = _cache_get(self._restricted_cache, ck)
             if pool is None:
                 pool = _cache_put(self._restricted_cache, ck,
-                                  enumerate_partitions(cost, pipelines=pipes))
+                                  enumerate_partitions(cost,
+                                                       pipelines=admissible))
         else:
             pool = _cache_get(self._exhaustive_cache, point)
             if pool is None:
@@ -443,6 +544,30 @@ class QueryEngine:
                     cfg.resources not in allowed_pipes:
                 continue
             if not self._config_satisfies(cfg, cons, cost):
+                continue
+            out.append(cfg)
+        return out
+
+    def _dag_filtered(self, query: Query, cons: Constraints,
+                      cost: CostModel) -> list[PartitionConfig]:
+        """Exhaustive DAG pool + constraint filter.  Enumeration applies
+        ``exclude``/``pin`` up front (they shrink the recursion), so the
+        pool cache is keyed by them alongside the operating point."""
+        point = self._point_key(query.batch_size, query.replicas)
+        ck = (point, tuple(sorted(query.exclude)),
+              tuple(sorted(query.pin.items())))
+        pool = _cache_get(self._exhaustive_cache, ck)
+        if pool is None:
+            pool = _cache_put(self._exhaustive_cache, ck,
+                              enumerate_dag_partitions(cost, cons))
+        allowed_pipes = None if query.pipelines is None else \
+            set(self._valid_pipelines(query.pipelines))
+        out = []
+        for cfg in pool:
+            if allowed_pipes is not None and \
+                    tuple(cfg.pipeline) not in allowed_pipes:
+                continue
+            if not dag_config_satisfies(cost, cfg, cons):
                 continue
             out.append(cfg)
         return out

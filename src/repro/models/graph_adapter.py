@@ -1,10 +1,23 @@
-"""Adapter: DecoderLM -> Scission LayerGraph.
+"""Adapters: model zoo -> Scission LayerGraph.
 
 Makes the paper's partitioning a first-class feature for the transformer
 zoo: each scan group becomes one graph node (Scission's block), embedding
 and unembedding are the terminal nodes, and the residual stream is the
 single crossing tensor — so every group boundary is a valid partition
-point, exactly like the paper's linear DNNs.
+point, exactly like the paper's linear DNNs (:func:`lm_to_graph`).
+
+The DAG adapters emit **genuinely branchy** graphs for the DAG-general
+partitioner (``fuse_block_dag`` / ``SPSolver``):
+
+* :func:`encdec_to_graph` — the encoder stack and the target embedding run
+  as parallel branches off the token input, meeting at the decoder's
+  cross-attention (the natural encoder/decoder placement split);
+* :func:`moe_to_graph` — expert *shards* as parallel branches (replicated
+  routing, local expert compute), summed at the combine with a residual
+  fork→join edge (the expert-parallel deployment shape);
+* :func:`xlstm_to_graph` — each recurrent group's residual skip is a
+  graph-level fork→join edge, so the skip tensor and the group body can be
+  placed independently.
 
 Used by examples/partition_and_serve.py to split a small LM across the
 emulated device/edge/cloud tiers and execute it with PipelineExecutor.
@@ -18,6 +31,7 @@ import jax.numpy as jnp
 from repro.core.graph import LayerGraph, LayerNode
 from repro.models import layers as L
 from repro.models.lm import DecoderLM, _norm
+from repro.models.xlstm import mlstm, slstm
 
 
 def lm_to_graph(model: DecoderLM, params, *, batch: int, seq_len: int
@@ -62,5 +76,244 @@ def lm_to_graph(model: DecoderLM, params, *, batch: int, seq_len: int
     g.add(LayerNode("head", "unembed", apply=head_fn,
                     flops=2.0 * cfg.vocab * d * batch,
                     param_bytes=0), [prev])
+    g.trace()
+    return g
+
+
+def _tree_bytes(p) -> int:
+    return sum(int(jnp.size(a)) * a.dtype.itemsize
+               for a in jax.tree.leaves(p))
+
+
+def encdec_to_graph(model, params, *, batch: int, seq_len: int,
+                    enc_splits: int = 2) -> LayerGraph:
+    """EncDecLM -> branchy LayerGraph (teacher-forced text-to-text mode:
+    the source and target sequences share the input tokens, as in
+    denoising / summarisation self-conditioning).
+
+    Structure: the token input forks into the **encoder branch**
+    (source embedding, then ``enc_splits`` encoder sub-stacks ending in the
+    encoder final norm) and the **target-embedding branch**; both meet at
+    the decoder stack, whose cross-attention consumes the encoder memory —
+    the two branches are placeable on distinct resources and their
+    latencies overlap, which is exactly what the DAG cost model prices.
+    """
+    cfg = model.cfg
+    g = LayerGraph(cfg.name)
+    tok = g.input(jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+                  name="tokens")
+    normf = _norm(cfg)
+    positions = jnp.arange(seq_len, dtype=jnp.int32)[None, :]
+
+    # -- encoder branch ----------------------------------------------------
+    def src_embed_fn(tokens):
+        return model._embed_tokens(params, tokens, 0)
+
+    d = cfg.d_model
+    prev = g.add(LayerNode("src_embed", "embed", apply=src_embed_fn,
+                           flops=0.0, param_bytes=cfg.vocab * d * 2), [tok])
+
+    def enc_body(x, pg):
+        h = normf(pg["attn_norm"], x)
+        h, _ = L.attention(pg["attn"], h, positions=positions,
+                           causal=False, use_rope=False, q_chunk=cfg.q_chunk)
+        x = x + h
+        h = normf(pg["mlp_norm"], x)
+        return x + L.mlp(pg["mlp"], h, activation=cfg.activation)
+
+    n_enc = cfg.encoder_layers
+    splits = max(1, min(enc_splits, n_enc))
+    bounds = [round(i * n_enc / splits) for i in range(splits + 1)]
+    for si in range(splits):
+        lo, hi = bounds[si], bounds[si + 1]
+
+        def enc_fn(x, lo=lo, hi=hi, last=(si == splits - 1)):
+            for gi in range(lo, hi):
+                pg = jax.tree.map(lambda a, gi=gi: a[gi], params["encoder"])
+                x = enc_body(x, pg)
+            return normf(params["enc_final_norm"], x) if last else x
+
+        pbytes = (hi - lo) * _tree_bytes(
+            jax.tree.map(lambda a: a[0], params["encoder"]))
+        prev = g.add(LayerNode(f"enc{si}", "block", apply=enc_fn,
+                               flops=pbytes * batch * seq_len,
+                               param_bytes=pbytes), [prev])
+    memory = prev
+
+    # -- target-embedding branch -------------------------------------------
+    def tgt_embed_fn(tokens):
+        return model._embed_tokens(params, tokens, 0)
+
+    tgt = g.add(LayerNode("tgt_embed", "embed", apply=tgt_embed_fn,
+                          flops=0.0, param_bytes=cfg.vocab * d * 2), [tok])
+
+    # -- join: decoder stack (cross-attention reads the encoder memory) ----
+    def dec_fn(x, memory):
+        y, _ = model._decoder_stack(params, x, memory, None,
+                                    positions=positions, cache_len=None,
+                                    mode="train")
+        return y
+
+    dec_bytes = _tree_bytes(params["decoder"])
+    dec = g.add(LayerNode("decoder", "block", apply=dec_fn,
+                          flops=dec_bytes * batch * seq_len,
+                          param_bytes=dec_bytes), [tgt, memory])
+
+    def head_fn(x):
+        h = normf(params["final_norm"], x[:, -1:])
+        return L.unembed(params["embed"], h, softcap=cfg.final_softcap)
+
+    g.add(LayerNode("head", "unembed", apply=head_fn,
+                    flops=2.0 * cfg.vocab * d * batch, param_bytes=0), [dec])
+    g.trace()
+    return g
+
+
+def moe_to_graph(p, *, batch: int, seq_len: int, d_model: int,
+                 n_experts: int, top_k: int, n_shards: int = 2,
+                 activation: str = "silu", name: str = "moe") -> LayerGraph:
+    """One MoE layer as an expert-parallel LayerGraph.
+
+    ``p`` is a :func:`repro.models.moe.moe_spec` param tree.  The input
+    activations fork into ``n_shards`` branches; each branch replicates the
+    (cheap) routing and computes only its local expert slice's gated
+    contribution — the standard expert-parallel decomposition, where each
+    shard lives on its own device.  The combine node sums the shard outputs
+    and the residual stream, which reaches it over a direct fork→join edge.
+
+    Routing is evaluated densely per shard (every local expert weighted by
+    its top-k gate, zero for unrouted tokens): semantically the token-choice
+    top-k of :func:`repro.models.moe.moe` without capacity dropping.
+    """
+    E = p["router"].shape[1]
+    shards = [list(range(s, n_experts, n_shards)) for s in range(n_shards)]
+    shards = [s for s in shards if s]
+    g = LayerGraph(name)
+    x0 = g.input(jax.ShapeDtypeStruct((batch, seq_len, d_model),
+                                      jnp.bfloat16), name="acts")
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+
+    def gates(x):
+        logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))
+        if n_experts < E:
+            logits = logits - jnp.where(jnp.arange(E) < n_experts, 0.0, 1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, idx = jax.lax.top_k(probs, top_k)
+        vals = vals / jnp.clip(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+        # dense per-expert gate: (B, S, E)
+        dense = jnp.zeros_like(probs)
+        for k in range(top_k):
+            dense = dense + vals[..., k, None] * \
+                jax.nn.one_hot(idx[..., k], E, dtype=jnp.float32)
+        return dense
+
+    shard_nodes = []
+    expert_bytes = _tree_bytes({k: p[k] for k in ("w_gate", "w_up", "w_down")})
+    for si, ids in enumerate(shards):
+
+        def shard_fn(x, ids=tuple(ids)):
+            dense = gates(x)
+            y = jnp.zeros_like(x, dtype=jnp.float32)
+            for e in ids:
+                h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"][e])) * \
+                    jnp.einsum("bsd,df->bsf", x, p["w_up"][e])
+                ye = jnp.einsum("bsf,fd->bsd", h, p["w_down"][e])
+                y = y + dense[..., e, None] * ye.astype(jnp.float32)
+            return y.astype(x.dtype)
+
+        pbytes = expert_bytes * len(ids) // E
+        shard_nodes.append(g.add(LayerNode(
+            f"experts{si}", "moe_shard", apply=shard_fn,
+            flops=6.0 * batch * seq_len * d_model *
+            p["w_up"].shape[2] * len(ids),
+            param_bytes=pbytes), [x0]))
+
+    def combine_fn(*ins):
+        *ys, x = ins
+        out = x.astype(jnp.float32)
+        for y in ys:
+            out = out + y.astype(jnp.float32)
+        return out.astype(x.dtype)
+
+    join = g.add(LayerNode("combine", "add", apply=combine_fn,
+                           flops=float(batch * seq_len * d_model *
+                                       (len(shards) + 1)),
+                           param_bytes=0), [*shard_nodes, x0])
+
+    g.add(LayerNode("out", "identity", apply=lambda x: x, flops=0.0,
+                    param_bytes=0), [join])
+    g.trace()
+    return g
+
+
+def xlstm_to_graph(model: DecoderLM, params, *, batch: int, seq_len: int
+                   ) -> LayerGraph:
+    """DecoderLM with an xLSTM pattern -> LayerGraph whose residual skips
+    are graph-level fork→join edges.
+
+    Each ``mlstm`` sub-layer becomes a (core, add) pair: the core node
+    computes the normed recurrent update, and the add node sums it with the
+    residual stream arriving over a direct edge from the fork — so the
+    recurrent body and the skip are independently placeable, and the SP
+    decomposition sees one single-branch parallel region per group.
+    ``slstm`` sub-layers (residual handled internally) stay chain nodes.
+    """
+    cfg = model.cfg
+    g = LayerGraph(cfg.name)
+    prev = g.input(jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+                   name="tokens")
+    normf = _norm(cfg)
+    d = cfg.d_model
+
+    def embed_fn(tokens):
+        return model._embed_inputs(params, tokens)
+
+    prev = g.add(LayerNode("embed", "embed", apply=embed_fn, flops=0.0,
+                           param_bytes=cfg.vocab * d * 2), [prev])
+
+    for gi in range(cfg.n_groups):
+        pg = jax.tree.map(lambda a, gi=gi: a[gi], params["layers"])
+        for name, kind in zip(model.sub_names, model.kinds):
+            sp = pg[name]
+            pbytes = _tree_bytes(sp)
+            if kind == "mlstm":
+
+                def core_fn(x, sp=sp):
+                    h = normf(sp["norm"], x)
+                    h, _ = mlstm(sp["core"], cfg, h)
+                    return h
+
+                core = g.add(LayerNode(
+                    f"g{gi}_{name}", "mlstm", apply=core_fn,
+                    flops=pbytes * batch * seq_len, param_bytes=pbytes),
+                    [prev])
+                prev = g.add(LayerNode(
+                    f"g{gi}_{name}_add", "add",
+                    apply=lambda h, x: x + h,
+                    flops=float(batch * seq_len * d), param_bytes=0),
+                    [core, prev])
+            elif kind == "slstm":
+
+                def s_fn(x, sp=sp):
+                    y, _ = slstm(sp["core"], cfg, x)
+                    return y
+
+                prev = g.add(LayerNode(
+                    f"g{gi}_{name}", "slstm", apply=s_fn,
+                    flops=pbytes * batch * seq_len, param_bytes=pbytes),
+                    [prev])
+            else:
+                raise ValueError(
+                    f"xlstm_to_graph supports mlstm/slstm groups, got "
+                    f"{kind!r}; use lm_to_graph for mixed patterns")
+
+    def head_fn(x):
+        h = normf(params["final_norm"], x[:, -1:])
+        return L.unembed(params["embed"], h, softcap=cfg.final_softcap)
+
+    g.add(LayerNode("head", "unembed", apply=head_fn,
+                    flops=2.0 * cfg.vocab * d * batch, param_bytes=0),
+          [prev])
     g.trace()
     return g
