@@ -61,7 +61,6 @@ extremes), so batching economies are priced empirically, not assumed.
 
 from __future__ import annotations
 
-import bisect
 import itertools
 import math
 from dataclasses import dataclass, field, replace
@@ -72,6 +71,7 @@ import numpy as np
 from ..bench import BenchmarkDB
 from ..network import NetworkModel
 from ..resources import Resource
+from .labelset import grouped_nondominated, grouped_topk, nondominated_rows
 
 
 @dataclass(frozen=True)
@@ -540,7 +540,8 @@ class _LatticeBase:
     """
 
     def __init__(self, cost: CostModel,
-                 constraints: Constraints | None = None):
+                 constraints: Constraints | None = None,
+                 plan: "ChainPlan | None" = None):
         self.cost = cost
         self.cons = constraints or Constraints()
         self.res = [r for r in cost.resources
@@ -559,6 +560,12 @@ class _LatticeBase:
         self.infeasible = (
             any(n not in self.names for n in demanded)
             or any(k > cost.n_blocks for k in self.nmin.values()))
+        # a caller-supplied ChainPlan (batch-independent solve structure,
+        # see ChainPlan) is adopted only when it was built over the same
+        # resource axis — the engine keys its plan cache by the constraint
+        # signature, so a matching axis implies matching matrices
+        if plan is not None and plan.names == self.names:
+            self._plan = plan
 
     def _bit(self, resource: str) -> int:
         i = self.must_idx.get(resource)
@@ -585,6 +592,71 @@ class _LatticeBase:
         k = self.nmin.get(resource)
         return k is None or end - start + 1 >= k
 
+    def _get_plan(self) -> "ChainPlan":
+        plan = getattr(self, "_plan", None)
+        if plan is None:
+            plan = self._plan = ChainPlan(self.cost, base=self)
+        return plan
+
+
+class ChainPlan:
+    """Batch-independent structure of a chain-lattice solve.
+
+    Everything a chain DP transition needs that does *not* depend on the
+    operating point: the exclude-filtered resource axis, the tier-order
+    transition matrix, per-block ``allowed`` masks, link latency /
+    bandwidth / byte-limit matrices, and the vectorised forms of the in-DP
+    constraints.  One plan is shared across a whole
+    ``QueryEngine.frontier()`` operating-point sweep (solve structure
+    once, re-price per batch) and across elastic re-plans; per-batch
+    numeric tables (block times, output bytes, replica divisors) stay in
+    the per-solve ``_tables``.
+    """
+
+    def __init__(self, cost: CostModel,
+                 constraints: Constraints | None = None,
+                 base: _LatticeBase | None = None):
+        if base is None:
+            base = _LatticeBase(cost, constraints)
+        self.cons = base.cons
+        self.names = list(base.names)
+        self.must = list(base.must)
+        self.full_mask = base.full_mask
+        self.infeasible = base.infeasible
+        R = len(self.names)
+        B = cost.n_blocks
+        self.R, self.B = R, B
+        self.tracked = np.array([base._tracked(n) for n in self.names],
+                                dtype=bool)
+        self.tmaxv = np.array([base.tmax.get(n, math.inf)
+                               for n in self.names])
+        self.nminv = np.array([base.nmin.get(n, 0) for n in self.names],
+                              dtype=np.int64)
+        self.bitv = np.array([base._bit(n) for n in self.names],
+                             dtype=np.int64)
+        self.allowed = np.array(
+            [[self.cons.allowed(b, n) for n in self.names]
+             for b in range(B)], dtype=bool)
+        ordv = np.array([base.order[n] for n in self.names])
+        # [i, j] == a hand-off i -> j moves to a strictly later tier
+        self.ok_pair = ordv[None, :] > ordv[:, None]
+        lat = np.zeros((R, R))
+        bw = np.full((R, R), math.inf)
+        for i, a in enumerate(self.names):
+            for j, b2 in enumerate(self.names):
+                if i == j:
+                    continue
+                lnk = cost.network.link(a, b2)
+                lat[i, j] = lnk.latency_s
+                bw[i, j] = lnk.bandwidth
+        self.latm, self.bwm = lat, bw
+        lim = np.full((R, R), math.inf)
+        idx = {n: i for i, n in enumerate(self.names)}
+        for (a, b2), v in self.cons.max_link_bytes.items():
+            if a in idx and b2 in idx:
+                lim[idx[a], idx[b2]] = v
+        self.limitm = lim
+
 
 class PartitionLattice(_LatticeBase):
     """Viterbi over (block, resource, used-mask) with k-best extraction.
@@ -600,9 +672,13 @@ class PartitionLattice(_LatticeBase):
     no post-filtering.
     """
 
+    labels_kept = 0
+    labels_pruned = 0
+
     def __init__(self, cost: CostModel, constraints: Constraints | None = None,
-                 objective: Objective = LATENCY):
-        super().__init__(cost, constraints)
+                 objective: Objective = LATENCY,
+                 plan: "ChainPlan | None" = None):
+        super().__init__(cost, constraints, plan=plan)
         self.obj = objective
 
     def _step_cost(self, resource: str, block: int) -> float:
@@ -613,22 +689,6 @@ class PartitionLattice(_LatticeBase):
         return (self.obj.w_latency * self.cost.comm(src, dst, nbytes)
                 + self.obj.w_transfer_per_mb * nbytes / 1e6)
 
-    @staticmethod
-    def _push(store: dict, key, entry, k: int) -> None:
-        """Bounded-sorted insertion of ``entry`` into ``store[key]``.
-
-        Entries are (score, tie, ...) tuples with a unique tie counter, so
-        tuple comparison never reaches the non-comparable tail; a full
-        re-sort per insertion (O(K log K) per relaxed edge) is replaced by
-        a rejection test plus one O(K) ``bisect.insort``.
-        """
-        lst = store.setdefault(key, [])
-        if len(lst) >= k:
-            if entry[0] >= lst[-1][0]:
-                return                   # cannot enter a full list
-            del lst[-1]
-        bisect.insort(lst, entry)
-
     def solve(self, top_n: int = 1) -> list[PartitionConfig]:
         """k-best paths through the lattice; returns up to ``top_n`` feasible
         configs ranked by the objective.
@@ -638,101 +698,117 @@ class PartitionLattice(_LatticeBase):
         start) state are interchangeable prefixes for every feasible
         completion, hence ``K == top_n`` per state suffices and distinct
         entries reconstruct distinct configs (a path determines its state).
+
+        Each block's labels live in flat arrays (score / resource / mask /
+        open-seg start / parent row) and the per-state k-best cut is one
+        :func:`grouped_topk` call — no per-label Python in the hot loop.
         """
+        self.labels_kept = self.labels_pruned = 0
         if top_n <= 0 or self.infeasible:
             return []
-        B = self.cost.n_blocks
+        cost = self.cost
+        plan = self._get_plan()
+        B, R = plan.B, plan.R
         K = top_n
-        # state (resource, mask, open-seg start | -1 if untracked) -> k-best
-        # entries; paths kept as parent pointers to bound memory: entry =
-        # (score, tie, resource, mask, parent_entry)
-        Entry = tuple  # (score, tie, resource, mask, parent)
-        frontier: dict[tuple[str, int, int], list[Entry]] = {}
-        tie = itertools.count()
-        push = self._push
+        rsel = [cost._idx[n] for n in plan.names]
+        cum = cost.cum[rsel]
+        steps = np.ascontiguousarray((cum[:, 1:] - cum[:, :-1]).T)  # (B, R)
+        wsteps = self.obj.w_latency * steps
+        wtr = self.obj.w_transfer_per_mb
 
-        for r in self.names:
-            if not self.cons.allowed(0, r) or not self._seg_ok(r, 0, 0):
+        # block 0 (scalar: one row per feasible start resource)
+        rows = []
+        for j, r in enumerate(plan.names):
+            if not plan.allowed[0, j] or not (steps[0, j] <= plan.tmaxv[j]):
                 continue
             inp = 0.0
-            if r != self.cost.source:
-                nbytes = self.cost.batch_input_bytes
-                if not self.cons.transition_allowed(self.cost.source, r,
-                                                    nbytes):
+            if r != cost.source:
+                nbytes = cost.batch_input_bytes
+                if not plan.cons.transition_allowed(cost.source, r, nbytes):
                     continue
-                inp = self._comm_cost(self.cost.source, r, nbytes)
-            score = inp + self._step_cost(r, 0)
-            mask = self._mask_with(0, r)
-            push(frontier, (r, mask, 0 if self._tracked(r) else -1),
-                 (score, next(tie), r, mask, None), K)
+                inp = self._comm_cost(cost.source, r, nbytes)
+            rows.append((inp + wsteps[0, j], j))
+        score = np.array([x[0] for x in rows])
+        rix = np.array([x[1] for x in rows], dtype=np.int64)
+        msk = plan.bitv[rix]
+        sta = np.where(plan.tracked[rix], 0, -1) if len(rix) else \
+            np.zeros(0, dtype=np.int64)
+        par = np.full(len(rix), -1, dtype=np.int64)
+        blocks = [{"rix": rix, "par": par}]
 
         for b in range(1, B):
-            nxt: dict[tuple[str, int, int], list[Entry]] = {}
-            nbytes = float(self.cost.out_bytes[b - 1])
-            for (r, mask, start), entries in frontier.items():
-                # stay: the open segment grows through block b (prune the
-                # moment it exceeds its compute-time cap)
-                if self.cons.allowed(b, r) and \
-                        (start < 0 or self._seg_ok(r, start, b)):
-                    step = self._step_cost(r, b)
-                    for e in entries:
-                        push(nxt, (r, mask, start),
-                             (e[0] + step, next(tie), r, mask, e), K)
-                # hand off to a later tier: closes [start..b-1] on r, which
-                # must meet r's min-block floor
-                if start >= 0 and not self._close_ok(r, start, b - 1):
-                    continue
-                for r2 in self.names:
-                    if self.order[r2] <= self.order[r] or \
-                            not self.cons.allowed(b, r2) or \
-                            not self.cons.transition_allowed(r, r2, nbytes) \
-                            or not self._seg_ok(r2, b, b):
-                        continue
-                    m2 = self._mask_with(mask, r2)
-                    s2 = b if self._tracked(r2) else -1
-                    hop = self._comm_cost(r, r2, nbytes) \
-                        + self._step_cost(r2, b)
-                    for e in entries:
-                        push(nxt, (r2, m2, s2),
-                             (e[0] + hop, next(tie), r2, m2, e), K)
-            frontier = nxt
+            nbytes = float(cost.out_bytes[b - 1])
+            steps_b = steps[b]
+            # stay: the open segment grows through block b (pruned the
+            # moment it would exceed its compute-time cap)
+            ok = plan.allowed[b][rix].copy()
+            tr = np.flatnonzero(ok & (sta >= 0))
+            if len(tr):
+                segt = cum[rix[tr], b + 1] - cum[rix[tr], sta[tr]]
+                ok[tr] &= segt <= plan.tmaxv[rix[tr]]
+            stay = np.flatnonzero(ok)
+            # hand off to a later tier: closes [start..b-1] on r, which
+            # must meet r's min-block floor
+            close = (sta < 0) | ((b - sta) >= plan.nminv[rix])
+            src = np.flatnonzero(close)
+            tmask = plan.allowed[b] & (steps_b <= plan.tmaxv)
+            pair = plan.ok_pair & (nbytes <= plan.limitm) & tmask[None, :]
+            si_l, tj = np.nonzero(pair[rix[src]])
+            si = src[si_l]
+            hopm = (self.obj.w_latency * (plan.latm + nbytes / plan.bwm)
+                    + wtr * nbytes / 1e6) + wsteps[b][None, :]
+            c_score = np.concatenate(
+                [score[stay] + wsteps[b, rix[stay]],
+                 score[si] + hopm[rix[si], tj]])
+            c_rix = np.concatenate([rix[stay], tj])
+            c_msk = np.concatenate([msk[stay], msk[si] | plan.bitv[tj]])
+            c_sta = np.concatenate(
+                [sta[stay], np.where(plan.tracked[tj], b, -1)])
+            c_par = np.concatenate([stay, si])
+            key = ((c_rix * np.int64(plan.full_mask + 1) + c_msk)
+                   * np.int64(B + 2) + (c_sta + 1))
+            keep = grouped_topk(key, c_score, K)
+            self.labels_kept += len(keep)
+            self.labels_pruned += len(c_score) - len(keep)
+            score, rix, msk, sta, par = (c_score[keep], c_rix[keep],
+                                         c_msk[keep], c_sta[keep],
+                                         c_par[keep])
+            blocks.append({"rix": rix, "par": par})
 
-        finals: list[Entry] = []
-        for (r, mask, start), entries in frontier.items():
-            if mask != self.full_mask:
-                continue
-            if start >= 0 and not self._close_ok(r, start, B - 1):
-                continue
-            finals.extend(entries)
-        finals.sort(key=lambda e: e[0])
-
+        fin = (msk == plan.full_mask) & \
+            ((sta < 0) | ((B - sta) >= plan.nminv[rix]))
+        order = np.argsort(score[np.flatnonzero(fin)], kind="stable")
+        finals = np.flatnonzero(fin)[order]
         out: list[PartitionConfig] = []
         seen: set[tuple[Segment, ...]] = set()
-        for e in finals:
-            segs = self._reconstruct(e)
+        for i in finals:
+            segs = _walk_path(blocks, int(i), plan.names)
             if segs in seen:
                 continue
             seen.add(segs)
-            out.append(self.cost.evaluate(segs))
+            out.append(cost.evaluate(segs))
             if len(out) >= top_n:
                 break
         return out
 
-    @staticmethod
-    def _reconstruct(entry) -> tuple[Segment, ...]:
-        path: list[str] = []
-        e = entry
-        while e is not None:
-            path.append(e[2])
-            e = e[4]
-        path.reverse()
-        segs: list[Segment] = []
-        start = 0
-        for i in range(1, len(path) + 1):
-            if i == len(path) or path[i] != path[start]:
-                segs.append(Segment(path[start], start, i - 1))
-                start = i
-        return tuple(segs)
+
+def _walk_path(blocks: list[dict], i: int,
+               names: list[str]) -> tuple[Segment, ...]:
+    """Follow parent rows from row ``i`` of the last block back to block 0
+    and fold the resource path into contiguous segments."""
+    path: list[str] = []
+    for b in range(len(blocks) - 1, -1, -1):
+        blk = blocks[b]
+        path.append(names[blk["rix"][i]])
+        i = int(blk["par"][i])
+    path.reverse()
+    segs: list[Segment] = []
+    start = 0
+    for k in range(1, len(path) + 1):
+        if k == len(path) or path[k] != path[start]:
+            segs.append(Segment(path[start], start, k - 1))
+            start = k
+    return tuple(segs)
 
 
 class BottleneckLattice(_LatticeBase):
@@ -777,6 +853,8 @@ class BottleneckLattice(_LatticeBase):
     # early-returning solve — infeasible / top_n <= 0 — reads as no-op)
     _tie_cut = math.inf
     _dispatched = False
+    labels_kept = 0
+    labels_pruned = 0
 
     def solve(self, top_n: int = 1) -> list[PartitionConfig]:
         if top_n <= 0 or self.infeasible:
@@ -799,8 +877,15 @@ class BottleneckLattice(_LatticeBase):
             run[r] = ends[:B]
 
         # memo[(b, ri, need)] = up to K (value, end, child_key, child_pos),
-        # sorted ascending; ``need`` never contains ri's own bit
+        # sorted ascending; ``need`` never contains ri's own bit.  VAL is
+        # the same pools as padded value arrays: the candidate merge below
+        # gathers every child pool of a state in one fancy index and sorts
+        # the max-composed values in one stable argsort — only the <= K
+        # surviving entries are materialised as Python tuples.
         memo: dict[tuple[int, int, int], list[tuple]] = {}
+        self.labels_kept = self.labels_pruned = 0
+        FM = self.full_mask + 1
+        VAL = np.full((B, len(names), FM, K), math.inf)
         for b in range(B - 1, -1, -1):
             for ri, r in enumerate(names):
                 n_run = run[r][b]
@@ -828,23 +913,53 @@ class BottleneckLattice(_LatticeBase):
                             continue
                         base = max(seg_t, self.cost.hop_period(r, r2, nbytes))
                         trans.append((base, end, rj, ~self._bit(r2)))
-                for need in range(self.full_mask + 1):
+                if trans:
+                    basev = np.array([t[0] for t in trans])
+                    endv = np.array([t[1] for t in trans], dtype=np.intp)
+                    rjv = np.array([t[2] for t in trans], dtype=np.intp)
+                    clearv = np.array([t[3] for t in trans], dtype=np.int64)
+                for need in range(FM):
                     if need & bit_r:
                         continue
-                    cands: list[tuple] = []
-                    if term is not None and need == 0:
-                        cands.append((term, B - 1, None, -1))
-                    for base, end, rj, clear in trans:
-                        ck = (end + 1, rj, need & clear)
-                        child = memo.get(ck)
-                        if not child:
+                    has_term = term is not None and need == 0
+                    if not trans:
+                        ents = [(term, B - 1, None, -1)] if has_term else []
+                        memo[(b, ri, need)] = ents
+                        if ents:
+                            VAL[b, ri, need, 0] = term
+                        self.labels_kept += len(ents)
+                        continue
+                    # candidate values: term first, then trans-major /
+                    # child-pos-minor — the exact order the scalar merge
+                    # appended them in, so the stable sort breaks value
+                    # ties identically; inf padding sorts to the end
+                    flat = np.maximum(basev[:, None],
+                                      VAL[endv + 1, rjv,
+                                          need & clearv]).ravel()
+                    off = 0
+                    if has_term:
+                        flat = np.concatenate([[term], flat])
+                        off = 1
+                    order = np.argsort(flat, kind="stable")
+                    vals = flat[order]
+                    n_real = int(np.searchsorted(vals, math.inf))
+                    if n_real > K:
+                        self._tie_cut = min(self._tie_cut, float(vals[K]))
+                    k = min(K, n_real)
+                    ents = []
+                    for fi in order[:k]:
+                        if has_term and fi == 0:
+                            ents.append((term, B - 1, None, -1))
                             continue
-                        for pos, ce in enumerate(child):
-                            cands.append((max(base, ce[0]), end, ck, pos))
-                    cands.sort(key=lambda t: t[0])
-                    if len(cands) > K:
-                        self._tie_cut = min(self._tie_cut, cands[K][0])
-                    memo[(b, ri, need)] = cands[:K]
+                        ti, pos = divmod(int(fi) - off, K)
+                        ck = (int(endv[ti]) + 1, int(rjv[ti]),
+                              need & int(clearv[ti]))
+                        ents.append((float(flat[fi]), int(endv[ti]),
+                                     ck, pos))
+                    memo[(b, ri, need)] = ents
+                    VAL[b, ri, need, :k] = vals[:k]
+                    self.labels_kept += k
+                    self.labels_pruned += n_real - k
 
         finals: list[tuple[float, tuple[int, int, int], int]] = []
         for ri, r in enumerate(names):
@@ -933,47 +1048,10 @@ class BottleneckLattice(_LatticeBase):
             key, pos, start = child_key, child_pos, end + 1
 
 
-def _nondominated_rows(pts: np.ndarray, eps: float = 0.0) -> np.ndarray:
-    """Indices of rows of ``pts`` (every column minimised) surviving
-    dominance pruning, ascending.
-
-    Exact-duplicate rows collapse to one representative.  With ``eps == 0``
-    the filter is exact: a row is pruned iff some distinct row is <= in
-    every column.  With ``eps > 0`` a row is additionally pruned when a
-    *kept* row is within a factor (1+eps) in every column (multiplicative
-    ε-dominance, applied greedily in lexicographic order so mutually
-    ε-close rows keep exactly one representative).
-    """
-    n = len(pts)
-    if n <= 1:
-        return np.arange(n)
-    uniq, first = np.unique(pts, axis=0, return_index=True)
-    if len(uniq) <= 1024:
-        # pairwise filter: le[i, j] == row j dominates-or-equals row i;
-        # rows are distinct after np.unique, so any hit off the diagonal
-        # is strict somewhere
-        le = (uniq[None, :, :] <= uniq[:, None, :]).all(-1)
-        np.fill_diagonal(le, False)
-        alive = ~le.any(axis=1)
-        uniq, first = uniq[alive], first[alive]
-    if eps > 0.0 or len(uniq) > 1024:
-        # sequential sweep in lexicographic order: every exact dominator of
-        # a row sorts before it, so checking against kept rows is exact at
-        # eps == 0 and the canonical greedy archive at eps > 0 (pre-pruning
-        # exact-dominated rows above cannot hurt coverage — any dominator
-        # of a pruned row is itself within the ε bound of a kept row)
-        scale = 1.0 + eps
-        kept = np.empty_like(uniq)
-        kcount = 0
-        keep_list: list[int] = []
-        for u, i in zip(uniq, first):
-            if kcount and (kept[:kcount] <= u * scale).all(axis=1).any():
-                continue
-            kept[kcount] = u
-            kcount += 1
-            keep_list.append(int(i))
-        first = np.asarray(keep_list, dtype=np.intp)
-    return np.sort(first)
+# the dominance kernel lives in .labelset (vectorised, with a retained
+# scalar reference for the property tests); the historical name is kept —
+# the repro.core.partition shim and several tests import it from here
+_nondominated_rows = nondominated_rows
 
 
 class ParetoLattice(_LatticeBase):
@@ -1022,137 +1100,346 @@ class ParetoLattice(_LatticeBase):
 
     def __init__(self, cost: CostModel,
                  constraints: Constraints | None = None,
-                 epsilon: float = 0.0):
+                 epsilon: float = 0.0,
+                 plan: ChainPlan | None = None):
         if epsilon < 0.0:
             raise ValueError(f"epsilon must be >= 0, got {epsilon}")
         super().__init__(cost, constraints)
         self.epsilon = float(epsilon)
         self.labels_kept = 0
         self.labels_pruned = 0
+        self.state: LabelState | None = None
+        if plan is not None and plan.names == self.names:
+            self._plan = plan
 
     def _div(self, resource: str) -> float:
         """Per-request divisor of a compute stage on ``resource`` — the
         label's open-segment time over this is its eventual stage period."""
         return self.cost.replicas_for(resource) * self.cost.batch_size
 
-    def solve(self) -> list[PartitionConfig]:
-        """The exact (ε = 0) non-dominated set of configurations, sorted by
-        (latency, bottleneck, transfer)."""
-        cost = self.cost
-        B = cost.n_blocks
-        self.labels_kept = self.labels_pruned = 0
-        if self.infeasible:
-            return []
-        # state (resource, mask, open-seg start | -1 if untracked) ->
-        # ((L, 4) label array, parallel [(prev_key, prev_idx)])
-        cur: dict[tuple[str, int, int], tuple[np.ndarray, list]] = {}
-        for r in self.names:
-            if not self.cons.allowed(0, r) or not self._seg_ok(r, 0, 0):
+    # -- per-solve numeric tables (operating-point dependent) --------------
+    def _tables(self) -> dict:
+        cost, plan = self.cost, self._get_plan()
+        rsel = [cost._idx[n] for n in plan.names]
+        cum = cost.cum[rsel]
+        # per-block times as prefix-sum differences — the exact arithmetic
+        # of CostModel.segment_time, so feasibility and label values agree
+        # bit for bit with the scalar path and the exhaustive oracle
+        steps = np.ascontiguousarray((cum[:, 1:] - cum[:, :-1]).T)  # (B, R)
+        div = np.array([cost.replicas_for(n) * cost.batch_size
+                        for n in plan.names], dtype=np.float64)
+        return {"cum": cum, "steps": steps, "div": div,
+                "out": cost.out_bytes}
+
+    def _init_block(self, tbl: dict, only=None) -> dict:
+        """Block-0 label rows (``only`` restricts the start resources — the
+        join-delta path seeds starts on joined resources alone)."""
+        cost, plan = self.cost, self._get_plan()
+        rows = []
+        for j in (range(plan.R) if only is None else only):
+            r = plan.names[j]
+            if not plan.allowed[0, j] or \
+                    not (tbl["steps"][0, j] <= plan.tmaxv[j]):
                 continue
             lat = bneck = xfer = 0.0
             if r != cost.source:
                 nbytes = cost.batch_input_bytes
-                if not self.cons.transition_allowed(cost.source, r, nbytes):
+                if not plan.cons.transition_allowed(cost.source, r, nbytes):
                     continue
                 lat = cost.comm(cost.source, r, nbytes)
                 bneck = cost.hop_period(cost.source, r, nbytes)
                 xfer = nbytes
-            step = cost.segment_time(r, 0, 0)
-            key = (r, self._mask_with(0, r), 0 if self._tracked(r) else -1)
-            cur[key] = (
-                np.array([[lat + step, bneck, xfer, step]]), [(None, -1)])
-        hist = [cur]
-        for b in range(1, B):
-            nbytes = float(cost.out_bytes[b - 1])
-            groups: dict[tuple[str, int, int], list] = {}
-            for (r, mask, start), (arr, metas) in cur.items():
-                refs = [((r, mask, start), i) for i in range(len(metas))]
-                if self.cons.allowed(b, r) and \
-                        (start < 0 or self._seg_ok(r, start, b)):
-                    # extend the open segment (pruned the moment it would
-                    # exceed its compute-time cap)
-                    step = cost.segment_time(r, b, b)
-                    groups.setdefault((r, mask, start), []).append(
-                        (arr + np.array([step, 0.0, 0.0, step]), refs))
-                if start >= 0 and not self._close_ok(r, start, b - 1):
-                    continue               # closing would violate the floor
-                div = self._div(r)
-                for r2 in self.names:              # close it and hand off
-                    if self.order[r2] <= self.order[r] or \
-                            not self.cons.allowed(b, r2) or \
-                            not self.cons.transition_allowed(r, r2, nbytes) \
-                            or not self._seg_ok(r2, b, b):
-                        continue
-                    hop = cost.comm(r, r2, nbytes)
-                    hop_p = cost.hop_period(r, r2, nbytes)
-                    step2 = cost.segment_time(r2, b, b)
-                    a2 = np.empty_like(arr)
-                    a2[:, 0] = arr[:, 0] + (hop + step2)
-                    a2[:, 1] = np.maximum(
-                        np.maximum(arr[:, 1], arr[:, 3] / div), hop_p)
-                    a2[:, 2] = arr[:, 2] + nbytes
-                    a2[:, 3] = step2
-                    key2 = (r2, self._mask_with(mask, r2),
-                            b if self._tracked(r2) else -1)
-                    groups.setdefault(key2, []).append((a2, refs))
-            cur = {}
-            for key, chunks in groups.items():
-                arr = chunks[0][0] if len(chunks) == 1 else \
-                    np.concatenate([c[0] for c in chunks])
-                metas = [m for c in chunks for m in c[1]]
-                keep = _nondominated_rows(arr, self.epsilon)
-                self.labels_kept += len(keep)
-                self.labels_pruned += len(arr) - len(keep)
-                cur[key] = (arr[keep], [metas[i] for i in keep])
-            hist.append(cur)
+            step = float(tbl["steps"][0, j])
+            rows.append((lat + step, bneck, xfer, step, j))
+        lab = np.array([x[:4] for x in rows],
+                       dtype=np.float64).reshape(-1, 4)
+        rix = np.array([x[4] for x in rows], dtype=np.int64)
+        return {"lab": lab, "rix": rix, "msk": plan.bitv[rix],
+                "sta": np.where(plan.tracked[rix], 0, -1).astype(np.int64),
+                "par": np.full(len(rix), -1, dtype=np.int64),
+                "used": np.int64(1) << rix}
 
-        # close every final open segment and filter the completed vectors
-        # (states split by open-seg start rejoin here: the filter is global)
-        finals: list[tuple[tuple[str, int, int], int]] = []
-        vecs: list[np.ndarray] = []
-        for (r, mask, start), (arr, metas) in cur.items():
-            if mask != self.full_mask:
-                continue
-            if start >= 0 and not self._close_ok(r, start, B - 1):
-                continue
-            vec = np.empty((len(arr), 3))
-            vec[:, 0] = arr[:, 0]
-            vec[:, 1] = np.maximum(arr[:, 1], arr[:, 3] / self._div(r))
-            vec[:, 2] = arr[:, 2]
-            for i in range(len(arr)):
-                finals.append(((r, mask, start), i))
-                vecs.append(vec[i])
-        if not finals:
+    def _advance(self, prev: dict, b: int, tbl: dict,
+                 delta_from: int = 0, joined=None,
+                 protect: dict | None = None) -> dict:
+        """One fused extend-then-prune step: all candidate labels of block
+        ``b`` from the rows of block ``b - 1``, pruned per state in one
+        :func:`grouped_nondominated` call.
+
+        ``delta_from`` / ``joined`` / ``protect`` serve the incremental
+        join path: rows of ``prev`` below ``delta_from`` are replayed old
+        rows — they do not stay (their extensions are already in
+        ``protect``, the old rows of block ``b``) and hand off only into
+        ``joined`` resource columns; ``protect`` rows are prepended
+        unprunable and only the delta candidates compete against them.
+        """
+        cost, plan = self.cost, self._get_plan()
+        lab, rix, msk, sta, used = (prev["lab"], prev["rix"], prev["msk"],
+                                    prev["sta"], prev["used"])
+        steps_b = tbl["steps"][b]
+        cum = tbl["cum"]
+        nbytes = float(tbl["out"][b - 1])
+        # stay: the open segment grows through block b (pruned the moment
+        # it would exceed its compute-time cap)
+        ok = plan.allowed[b][rix].copy()
+        if delta_from:
+            ok[:delta_from] = False
+        tr = np.flatnonzero(ok & (sta >= 0))
+        if len(tr):
+            segt = cum[rix[tr], b + 1] - cum[rix[tr], sta[tr]]
+            ok[tr] &= segt <= plan.tmaxv[rix[tr]]
+        stay = np.flatnonzero(ok)
+        s_lab = lab[stay].copy()
+        sv = steps_b[rix[stay]]
+        s_lab[:, 0] += sv
+        s_lab[:, 3] += sv
+        # hand off: closes [sta..b-1] (min-block floor) and opens block b
+        # on a strictly later tier
+        close = (sta < 0) | ((b - sta) >= plan.nminv[rix])
+        src = np.flatnonzero(close)
+        tmask = plan.allowed[b] & (steps_b <= plan.tmaxv)
+        pair = plan.ok_pair & (nbytes <= plan.limitm) & tmask[None, :]
+        mat = pair[rix[src]]
+        if delta_from and joined is not None:
+            jm = np.zeros(plan.R, dtype=bool)
+            jm[joined] = True
+            mat[src < delta_from] &= jm[None, :]
+        si_l, tj = np.nonzero(mat)
+        si = src[si_l]
+        rs = rix[si]
+        hopc = plan.latm + nbytes / plan.bwm
+        hs = hopc + steps_b[None, :]
+        hopp = hopc / cost.batch_size
+        h_lab = np.empty((len(si), 4))
+        h_lab[:, 0] = lab[si, 0] + hs[rs, tj]
+        h_lab[:, 1] = np.maximum(
+            np.maximum(lab[si, 1], lab[si, 3] / tbl["div"][rs]),
+            hopp[rs, tj])
+        h_lab[:, 2] = lab[si, 2] + nbytes
+        h_lab[:, 3] = steps_b[tj]
+        c_lab = np.concatenate([s_lab, h_lab])
+        c_rix = np.concatenate([rix[stay], tj])
+        c_msk = np.concatenate([msk[stay], msk[si] | plan.bitv[tj]])
+        c_sta = np.concatenate(
+            [sta[stay], np.where(plan.tracked[tj], b, -1)]).astype(np.int64)
+        c_par = np.concatenate([stay, si])
+        c_used = np.concatenate([used[stay],
+                                 used[si] | (np.int64(1) << tj)])
+        nprot = 0 if protect is None else len(protect["lab"])
+        if nprot:
+            key = (((np.concatenate([protect["rix"], c_rix])
+                     * np.int64(plan.full_mask + 1))
+                    + np.concatenate([protect["msk"], c_msk]))
+                   * np.int64(plan.B + 2)
+                   + (np.concatenate([protect["sta"], c_sta]) + 1))
+            keep = grouped_nondominated(
+                np.concatenate([protect["lab"], c_lab]), key, self.epsilon)
+            keep = keep[keep >= nprot] - nprot   # delta survivors only
+        else:
+            key = ((c_rix * np.int64(plan.full_mask + 1) + c_msk)
+                   * np.int64(plan.B + 2) + (c_sta + 1))
+            keep = grouped_nondominated(c_lab, key, self.epsilon)
+        self.labels_kept += len(keep)
+        self.labels_pruned += len(c_lab) - len(keep)
+        blk = {"lab": c_lab[keep], "rix": c_rix[keep], "msk": c_msk[keep],
+               "sta": c_sta[keep], "par": c_par[keep], "used": c_used[keep]}
+        if nprot:
+            blk = _concat_blocks(protect, blk)
+        return blk
+
+    def _finish(self, blocks: list[dict],
+                tbl: dict) -> list[PartitionConfig]:
+        """Close every final open segment, filter the completed vectors
+        globally (states split by open-seg start rejoin here), and price
+        the surviving paths through ``CostModel.evaluate`` — the single
+        source of truth for the objective vectors."""
+        cost, plan = self.cost, self._get_plan()
+        last = blocks[-1]
+        lab, rix, msk, sta = (last["lab"], last["rix"], last["msk"],
+                              last["sta"])
+        B = plan.B
+        fin = (msk == plan.full_mask) & \
+            ((sta < 0) | ((B - sta) >= plan.nminv[rix]))
+        rows = np.flatnonzero(fin)
+        if not len(rows):
             return []
-        keep = _nondominated_rows(np.stack(vecs), 0.0)
+        vec = np.empty((len(rows), 3))
+        vec[:, 0] = lab[rows, 0]
+        vec[:, 1] = np.maximum(lab[rows, 1],
+                               lab[rows, 3] / tbl["div"][rix[rows]])
+        vec[:, 2] = lab[rows, 2]
+        keep = nondominated_rows(vec, 0.0)
         out: list[PartitionConfig] = []
         seen: set[tuple[Segment, ...]] = set()
-        for i in keep:
-            key, idx = finals[i]
-            segs = self._reconstruct(hist, key, idx)
+        for i in rows[keep]:
+            segs = _walk_path(blocks, int(i), plan.names)
             if segs in seen:
                 continue
             seen.add(segs)
             out.append(cost.evaluate(segs))
-        # authoritative re-filter on the re-evaluated configs: the DP's
-        # label arithmetic accumulates sums incrementally while evaluate()
-        # uses prefix-sum differences, and evaluate() is the single source
-        # of truth for the objective vectors
         out = pareto_frontier(out)
         out.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
                                 c.transfer_bytes))
         return out
 
-    def _reconstruct(self, hist, key, idx) -> tuple[Segment, ...]:
-        path: list[str] = []
-        for b in range(len(hist) - 1, -1, -1):
-            path.append(key[0])
-            key, idx = hist[b][key][1][idx]
-        path.reverse()
-        segs: list[Segment] = []
-        start = 0
-        for i in range(1, len(path) + 1):
-            if i == len(path) or path[i] != path[start]:
-                segs.append(Segment(path[start], start, i - 1))
-                start = i
-        return tuple(segs)
+    def solve(self, keep_state: bool = False) -> list[PartitionConfig]:
+        """The exact (ε = 0) non-dominated set of configurations, sorted by
+        (latency, bottleneck, transfer).
+
+        ``keep_state=True`` additionally retains the per-block label
+        arrays on ``self.state`` for incremental elastic re-plans
+        (:meth:`resume` / :meth:`extend`)."""
+        plan = self._get_plan()
+        self.labels_kept = self.labels_pruned = 0
+        self.state = None
+        if plan.infeasible:
+            return []
+        tbl = self._tables()
+        blocks = [self._init_block(tbl)]
+        for b in range(1, plan.B):
+            blocks.append(self._advance(blocks[-1], b, tbl))
+        out = self._finish(blocks, tbl)
+        if keep_state:
+            self.state = LabelState(list(plan.names), list(plan.must),
+                                    self.epsilon, blocks, out,
+                                    plan.R <= _MAX_INC_RESOURCES)
+        return out
+
+    # -- incremental elastic re-plans --------------------------------------
+    def resume(self, prev: "LabelState",
+               keep_state: bool = False) -> list[PartitionConfig]:
+        """Warm re-solve after resources *left* the fleet.
+
+        The kept label arrays of ``prev`` are replayed up to (excluding)
+        the first block where any kept label's path ever touched a
+        departed resource; the DP re-runs only from that frontier.  Exact
+        at any ε: state keys name the current resource, so labels on
+        surviving resources below that block were generated from — and
+        pruned only against — labels on surviving resources, making the
+        replayed prefix identical to a cold solve's.  Falls back to a
+        cold solve when the state is unusable (different ε / must set /
+        non-subset membership).
+        """
+        plan = self._get_plan()
+        if (prev is None or not prev.supports_inc
+                or self.epsilon != prev.epsilon
+                or list(plan.must) != list(prev.must)
+                or any(n not in prev.names for n in plan.names)):
+            return self.solve(keep_state=keep_state)
+        self.labels_kept = self.labels_pruned = 0
+        self.state = None
+        if plan.infeasible:
+            return []
+        pos = {n: i for i, n in enumerate(plan.names)}
+        remap = np.array([pos.get(n, -1) for n in prev.names],
+                         dtype=np.int64)
+        lost = np.flatnonzero(remap < 0)
+        lost_bits = np.int64(0)
+        for i in lost:
+            lost_bits |= np.int64(1) << np.int64(i)
+        b0 = None
+        for b, blk in enumerate(prev.blocks):
+            if np.any(blk["used"] & lost_bits):
+                b0 = b
+                break
+        if b0 == 0:
+            return self.solve(keep_state=keep_state)
+        tbl = self._tables()
+        upto = len(prev.blocks) if b0 is None else b0
+        blocks = [_remap_block(prev.blocks[b], remap, len(prev.names))
+                  for b in range(upto)]
+        if b0 is None:
+            out = list(prev.configs)
+        else:
+            for b in range(b0, plan.B):
+                blocks.append(self._advance(blocks[-1], b, tbl))
+            out = self._finish(blocks, tbl)
+        if keep_state:
+            self.state = LabelState(list(plan.names), list(plan.must),
+                                    self.epsilon, blocks, out,
+                                    plan.R <= _MAX_INC_RESOURCES)
+        return out
+
+    def extend(self, prev: "LabelState",
+               keep_state: bool = False) -> list[PartitionConfig]:
+        """Warm re-solve after resources *joined* the fleet.
+
+        Old kept rows are replayed verbatim as protected rows; only the
+        delta — paths that visit a joined resource — is generated (old
+        rows hand off into joined columns only, block-0 starts seed on
+        joined resources only) and pruned against the protected rows.
+        Output-exact at ε == 0: a protected row a delta row dominates
+        yields only dominated completions, which the final global filter
+        and the authoritative ``pareto_frontier`` re-filter remove; by
+        dominance transitivity the delta prune loses nothing.  ε > 0
+        falls back cold (the greedy archive is order-dependent).
+        """
+        plan = self._get_plan()
+        if (prev is None or not prev.supports_inc
+                or self.epsilon != 0.0 or prev.epsilon != 0.0
+                or list(plan.must) != list(prev.must)
+                or plan.names[:len(prev.names)] != list(prev.names)
+                or plan.R > _MAX_INC_RESOURCES):
+            return self.solve(keep_state=keep_state)
+        self.labels_kept = self.labels_pruned = 0
+        self.state = None
+        if plan.infeasible:
+            return []
+        joined = np.arange(len(prev.names), plan.R)
+        tbl = self._tables()
+        blocks = [_concat_blocks(prev.blocks[0],
+                                 self._init_block(tbl, only=joined))]
+        for b in range(1, plan.B):
+            blocks.append(self._advance(
+                blocks[-1], b, tbl,
+                delta_from=len(prev.blocks[b - 1]["lab"]),
+                joined=joined, protect=prev.blocks[b]))
+        out = self._finish(blocks, tbl)
+        if keep_state:
+            self.state = LabelState(list(plan.names), list(plan.must),
+                                    self.epsilon, blocks, out,
+                                    plan.R <= _MAX_INC_RESOURCES)
+        return out
+
+
+# used-resource bitmasks are int64: incremental state needs one bit per
+# resource (fleets beyond this fall back to cold solves, which they would
+# want anyway — the bigger the fleet, the higher the churn rate)
+_MAX_INC_RESOURCES = 62
+
+
+@dataclass
+class LabelState:
+    """Final per-block label arrays of one ``ParetoLattice.solve(
+    keep_state=True)`` — what incremental elastic re-plans resume from.
+
+    ``blocks[b]`` holds parallel arrays ``lab`` (N, 4 label columns),
+    ``rix`` (resource index), ``msk`` (must-use mask), ``sta`` (open-seg
+    start, -1 untracked), ``par`` (parent row in block b-1) and ``used``
+    (bitmask over the resource axis of every resource on the row's path).
+    """
+
+    names: list[str]
+    must: list[str]
+    epsilon: float
+    blocks: list[dict]
+    configs: list[PartitionConfig]
+    supports_inc: bool
+
+
+def _concat_blocks(a: dict, b: dict) -> dict:
+    return {k: np.concatenate([a[k], b[k]]) for k in a}
+
+
+def _remap_block(blk: dict, remap: np.ndarray, n_old: int) -> dict:
+    """Re-index a replayed block onto a shrunken resource axis (`remap`
+    maps old resource index -> new, -1 for departed; no row of a replayed
+    block touches a departed resource, so every lookup is valid)."""
+    used = np.zeros_like(blk["used"])
+    for i_old in range(n_old):
+        i_new = remap[i_old]
+        if i_new >= 0:
+            used |= ((blk["used"] >> np.int64(i_old)) & np.int64(1)) \
+                << np.int64(i_new)
+    return {"lab": blk["lab"], "rix": remap[blk["rix"]], "msk": blk["msk"],
+            "sta": blk["sta"], "par": blk["par"], "used": used}

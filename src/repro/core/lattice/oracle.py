@@ -38,9 +38,17 @@ def _iter_assignments(preds: Sequence[Sequence[int]], names: list[str],
     ``allowed`` (exclude via the pre-filtered ``names``, pin per block) is
     applied during enumeration; everything else is filtered downstream so
     the enumeration set matches what the query engine caches.
+
+    The per-block candidate lists and tier orders are hoisted out of the
+    DFS: ``allowed``/``order`` answers are path-independent, and this
+    generator backs ``dag_search_space`` — which the engine runs on every
+    query dispatch — so the inner loop touches only precomputed lists.
     """
     B = len(preds)
+    cands = [[(r, order[r]) for r in names if cons.allowed(v, r)]
+             for v in range(B)]
     chosen: list[str] = []
+    chosen_ord: list[int] = []
     count = 0
 
     def rec(v: int):
@@ -49,20 +57,20 @@ def _iter_assignments(preds: Sequence[Sequence[int]], names: list[str],
             count += 1
             yield tuple(chosen)
             return
-        for r in names:
-            if not cons.allowed(v, r):
-                continue
+        pv = preds[v]
+        for r, o in cands[v]:
             ok = True
-            for u in preds[v]:
-                ru = chosen[u]
-                if ru != r and order[r] <= order[ru]:
+            for u in pv:
+                if chosen[u] != r and o <= chosen_ord[u]:
                     ok = False
                     break
             if not ok:
                 continue
             chosen.append(r)
+            chosen_ord.append(o)
             yield from rec(v + 1)
             chosen.pop()
+            chosen_ord.pop()
             if limit is not None and count > limit:
                 return
 

@@ -32,8 +32,8 @@ from dataclasses import dataclass, field, replace
 
 from .bench import BenchmarkDB
 from .network import NetworkModel
-from .partition import (BottleneckLattice, Constraints, CostModel,
-                        DagCostModel, Objective,
+from .partition import (BottleneckLattice, ChainPlan, Constraints, CostModel,
+                        DagCostModel, LabelState, Objective,
                         ThroughputObjective, LATENCY,
                         ParetoLattice, PartitionConfig, PartitionLattice,
                         SPSolver, dag_config_satisfies, dag_search_space,
@@ -42,7 +42,15 @@ from .partition import (BottleneckLattice, Constraints, CostModel,
                         trim_replicas)
 from .resources import Resource
 
-EXHAUSTIVE_LIMIT = 200_000
+# auto-dispatch crossover between the paper-faithful exhaustive strategy
+# and the vectorised lattices.  Re-measured after the label DPs went
+# vectorised (PR 8): a cold lattice solve beats cold enumeration from a
+# few hundred configs and a warm one (cached pool) from ~3k, so the old
+# 200_000 — which encoded per-label Python DP cost — kept enumeration far
+# past its win region.  10_000 keeps paper-testbed-sized spaces (~2.4k)
+# on the exhaustive path, which doubles as the validation oracle, and
+# dispatches everything larger to the lattices.
+EXHAUSTIVE_LIMIT = 10_000
 # enumerated-partition pools (and cost models) are cached per operating
 # point; a frontier sweep touches one per measured batch size, so keep a
 # small LRU rather than letting a long-lived engine accrete one ~200k-config
@@ -69,6 +77,16 @@ def _cache_put(cache: dict, key, val, limit: int = CACHE_POINTS):
 
 def _op_key(cfg: PartitionConfig) -> tuple:
     return (cfg.segments, cfg.batch_size, cfg.replicas)
+
+
+def _cons_key(cons: Constraints) -> tuple:
+    """Hashable signature of a Constraints — the cache key for everything
+    derived from the constraint structure (ChainPlan, warm SP solvers)."""
+    return (cons.must_use, tuple(sorted(cons.exclude)),
+            tuple(sorted(cons.pin.items())),
+            tuple(sorted(cons.max_link_bytes.items())),
+            tuple(sorted(cons.max_resource_time.items())),
+            tuple(sorted(cons.min_blocks_on.items())))
 
 
 def _dedupe(configs: list[PartitionConfig]) -> list[PartitionConfig]:
@@ -136,11 +154,16 @@ class QueryResult:
     configs: list[PartitionConfig]
     query_time_s: float
     strategy: str
-    # ParetoLattice label-set statistics, populated by the lattice frontier
-    # strategy: how many vector labels survived per-state dominance pruning
-    # across all states, and how many were pruned
+    # label-set statistics, populated by every lattice-strategy path
+    # (ParetoLattice frontier, PartitionLattice/BottleneckLattice k-best,
+    # SPSolver DAG solves): how many vector labels survived per-state
+    # dominance pruning across all states, and how many were pruned
     labels_kept: int = 0
     labels_pruned: int = 0
+    # pure solver wall time: the strategy call only, excluding constraint
+    # normalisation, cost-model construction/lookup and diagnostics — the
+    # number the smoke JSONs compare against the exhaustive oracle
+    solve_seconds: float = 0.0
     # scission-lint findings for this query (repro.analysis.plan_lint):
     # structural constraint problems, batch-clamp warnings drained from the
     # DB, and — for an empty result no structural error explains — the
@@ -180,6 +203,14 @@ class QueryEngine:
         self.cost = self._cost_for()
         self._exhaustive_cache: dict[tuple, list[PartitionConfig]] = {}
         self._restricted_cache: dict[tuple, list[PartitionConfig]] = {}
+        # batch-independent solve structure (ChainPlan) per constraint
+        # signature: one plan prices every operating point of a frontier
+        # sweep and every elastic re-plan at the same membership
+        self._plan_cache: dict[tuple, ChainPlan] = {}
+        # warm SPSolver per (constraints, operating point, epsilon): the
+        # solver memoises its per-block transition tables and final label
+        # sets, so a repeated DAG query re-prices instead of re-solving
+        self._sp_cache: dict[tuple, SPSolver] = {}
 
     # -- operating points ----------------------------------------------------
     @staticmethod
@@ -208,6 +239,39 @@ class QueryEngine:
                     batch_size=batch, replica_budget=reps)
             cost = _cache_put(self._costs, key, cost)
         return cost
+
+    def _plan_for(self, cons: Constraints) -> ChainPlan:
+        """Batch-independent :class:`ChainPlan` for a constraint signature
+        (small LRU).  The plan captures everything a lattice/SP solve needs
+        that does not depend on the operating point — resource axis, tier
+        transition matrix, link latency/bandwidth/limit matrices, per-block
+        ``allowed`` masks — so a frontier sweep solves the structure once
+        and re-prices per (batch, replicas), and elastic re-plans at an
+        unchanged membership skip the rebuild entirely."""
+        key = _cons_key(cons)
+        plan = _cache_get(self._plan_cache, key)
+        if plan is None:
+            plan = _cache_put(self._plan_cache, key,
+                              ChainPlan(self.cost, cons))
+        return plan
+
+    def _sp_for(self, cons: Constraints, cost: CostModel, query: Query,
+                epsilon: float = 0.0) -> SPSolver:
+        """Warm :class:`SPSolver` per (constraints, operating point, ε)
+        (small LRU).  Reusing the solver keeps its per-block transition
+        tables and memoised final label sets across queries, so repeated
+        solves at one operating point — e.g. the same query under several
+        objectives, or a solve followed by a frontier — skip the DP."""
+        key = (_cons_key(cons),
+               self._point_key(query.batch_size, query.replicas),
+               float(epsilon))
+        solver = _cache_get(self._sp_cache, key)
+        if solver is None:
+            solver = _cache_put(
+                self._sp_cache, key,
+                SPSolver(cost, cons, epsilon=epsilon,
+                         plan=self._plan_for(cons)))
+        return solver
 
     def _frontier_batches(self, query: Query) -> list[int]:
         """Batch sizes the frontier sweeps: an explicit ``Query.batch_sizes``
@@ -307,18 +371,24 @@ class QueryEngine:
         t0 = time.perf_counter()
         cons = query.constraints()
         cost = self._cost_for(query)
-        if self._search_space(query) <= EXHAUSTIVE_LIMIT:
+        kept = pruned = 0
+        exhaustive = self._search_space(query) <= EXHAUSTIVE_LIMIT
+        t1 = time.perf_counter()
+        if exhaustive:
             configs = self._run_exhaustive(query, cons, cost)
             strategy = "exhaustive"
         elif self.is_dag:
-            configs = self._run_sp(query, cons, cost)
+            configs, kept, pruned = self._run_sp(query, cons, cost)
             strategy = "lattice"
         else:
-            configs = self._run_lattice(query, cons, cost)
+            configs, kept, pruned = self._run_lattice(query, cons, cost)
             strategy = "lattice"
+        solve_s = time.perf_counter() - t1
         result = QueryResult(configs=configs,
                              query_time_s=time.perf_counter() - t0,
-                             strategy=strategy)
+                             strategy=strategy,
+                             labels_kept=kept, labels_pruned=pruned,
+                             solve_seconds=solve_s)
         self._attach_diagnostics(result, query, cons, [cost],
                                  batches=[query.batch_size])
         return result
@@ -367,6 +437,7 @@ class QueryEngine:
         cands: list[PartitionConfig] = []
         batches = self._frontier_batches(query)
         costs: list[CostModel] = []
+        t1 = time.perf_counter()
         for batch in batches:
             q = replace(query, batch_size=batch)
             cost = self._cost_for(q)
@@ -381,15 +452,85 @@ class QueryEngine:
         front = [trim_replicas(c) for c in pareto_frontier(_dedupe(cands))]
         front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
                                   c.transfer_bytes))
+        solve_s = time.perf_counter() - t1
         result = QueryResult(configs=front,
                              query_time_s=time.perf_counter() - t0,
                              strategy=strategy,
-                             labels_kept=kept, labels_pruned=pruned)
+                             labels_kept=kept, labels_pruned=pruned,
+                             solve_seconds=solve_s)
         # the frontier ignores top_n, and a timing-dependent error must
         # hold at every swept batch before it explains an empty frontier
         self._attach_diagnostics(result, query, cons, costs,
                                  batches=batches, check_top_n=False)
         return result
+
+    def frontier_incremental(self, query: Query | None = None,
+                             prev_states: dict[int, LabelState] | None = None
+                             ) -> tuple[QueryResult, dict[int, LabelState]]:
+        """Label-reusing frontier sweep for elastic re-plans.
+
+        Same result contract as :meth:`frontier` under the lattice
+        strategy, but every swept operating point keeps its final label
+        arrays (:class:`LabelState`, keyed by batch size) and a later call
+        at a changed resource membership warm-starts from them: a departed
+        resource invalidates only labels whose paths touch it
+        (:meth:`ParetoLattice.resume` replays the untouched prefix), a
+        joined resource generates only the delta paths that visit it
+        (:meth:`ParetoLattice.extend`).  Both fall back to a cold solve
+        whenever reuse would be unsound (ε mismatch, changed must-set,
+        non-prefix join order, fleets past the bitmask width), so the
+        returned frontier is always exactly the cold answer.
+
+        Caller contract: pass ``prev_states`` only across *membership*
+        changes — per-(block, resource) costs and the network must be
+        unchanged, as labels price both.  On a network/bandwidth change
+        pass ``None`` to force cold solves.  DAG and pipeline-restricted
+        engines fall back to a plain :meth:`frontier` and return no
+        states.
+        """
+        query = query or Query()
+        if self.is_dag or query.pipelines is not None:
+            return self.frontier(query), {}
+        t0 = time.perf_counter()
+        cons = query.constraints()
+        prev_states = prev_states or {}
+        plan = self._plan_for(cons)
+        kept = pruned = 0
+        cands: list[PartitionConfig] = []
+        states: dict[int, LabelState] = {}
+        batches = self._frontier_batches(query)
+        costs: list[CostModel] = []
+        t1 = time.perf_counter()
+        for batch in batches:
+            q = replace(query, batch_size=batch)
+            cost = self._cost_for(q)
+            costs.append(cost)
+            lat = ParetoLattice(cost, cons,
+                                epsilon=query.frontier_epsilon, plan=plan)
+            prev = prev_states.get(batch)
+            if prev is None:
+                configs = lat.solve(keep_state=True)
+            elif all(n in prev.names for n in lat.names):
+                configs = lat.resume(prev, keep_state=True)
+            else:
+                configs = lat.extend(prev, keep_state=True)
+            if lat.state is not None:
+                states[batch] = lat.state
+            cands.extend(configs)
+            kept += lat.labels_kept
+            pruned += lat.labels_pruned
+        front = [trim_replicas(c) for c in pareto_frontier(_dedupe(cands))]
+        front.sort(key=lambda c: (c.latency_s, c.bottleneck_s,
+                                  c.transfer_bytes))
+        solve_s = time.perf_counter() - t1
+        result = QueryResult(configs=front,
+                             query_time_s=time.perf_counter() - t0,
+                             strategy="lattice",
+                             labels_kept=kept, labels_pruned=pruned,
+                             solve_seconds=solve_s)
+        self._attach_diagnostics(result, query, cons, costs,
+                                 batches=batches, check_top_n=False)
+        return result, states
 
     def _attach_diagnostics(self, result: QueryResult, query: Query,
                             cons: Constraints, costs: list[CostModel],
@@ -425,24 +566,26 @@ class QueryEngine:
         eps = query.frontier_epsilon
         if self.is_dag:
             if query.pipelines is None:
-                solver = SPSolver(cost, cons, epsilon=eps)
+                solver = self._sp_for(cons, cost, query, epsilon=eps)
                 return (solver.frontier(), solver.labels_kept,
                         solver.labels_pruned)
             merged: list[PartitionConfig] = []
             kept = pruned = 0
             for pcons in self._pipe_constraints(query):
-                solver = SPSolver(cost, pcons, epsilon=eps)
+                solver = self._sp_for(pcons, cost, query, epsilon=eps)
                 merged.extend(solver.frontier())
                 kept += solver.labels_kept
                 pruned += solver.labels_pruned
             return merged, kept, pruned
         if query.pipelines is None:
-            lattice = ParetoLattice(cost, cons, epsilon=eps)
+            lattice = ParetoLattice(cost, cons, epsilon=eps,
+                                    plan=self._plan_for(cons))
             return lattice.solve(), lattice.labels_kept, lattice.labels_pruned
         merged = []
         kept = pruned = 0
         for pcons in self._pipe_constraints(query):
-            lattice = ParetoLattice(cost, pcons, epsilon=eps)
+            lattice = ParetoLattice(cost, pcons, epsilon=eps,
+                                    plan=self._plan_for(pcons))
             merged.extend(lattice.solve())
             kept += lattice.labels_kept
             pruned += lattice.labels_pruned
@@ -450,9 +593,10 @@ class QueryEngine:
 
     def _lattice_for(self, cons: Constraints, objective: Objective,
                      cost: CostModel):
+        plan = self._plan_for(cons)
         if isinstance(objective, ThroughputObjective):
-            return BottleneckLattice(cost, cons)
-        return PartitionLattice(cost, cons, objective)
+            return BottleneckLattice(cost, cons, plan=plan)
+        return PartitionLattice(cost, cons, objective, plan=plan)
 
     def _pipe_constraints(self, query: Query):
         """Per-pipe lattice restrictions for a ``Query.pipelines`` query:
@@ -481,30 +625,42 @@ class QueryEngine:
                 max_resource_time=query.max_resource_time,
                 min_blocks_on=query.min_blocks_on)
 
-    def _run_lattice(self, query: Query, cons: Constraints,
-                     cost: CostModel) -> list[PartitionConfig]:
+    def _run_lattice(self, query: Query, cons: Constraints, cost: CostModel
+                     ) -> tuple[list[PartitionConfig], int, int]:
+        """Returns (configs, labels_kept, labels_pruned)."""
         if query.pipelines is None:
-            return self._lattice_for(cons, query.objective, cost).solve(
-                top_n=query.top_n)
+            lat = self._lattice_for(cons, query.objective, cost)
+            return (lat.solve(top_n=query.top_n),
+                    lat.labels_kept, lat.labels_pruned)
         merged: list[PartitionConfig] = []
+        kept = pruned = 0
         for pcons in self._pipe_constraints(query):
-            merged.extend(self._lattice_for(pcons, query.objective, cost)
-                          .solve(top_n=query.top_n))
-        return rank(_dedupe(merged), query.objective, query.top_n)
+            lat = self._lattice_for(pcons, query.objective, cost)
+            merged.extend(lat.solve(top_n=query.top_n))
+            kept += lat.labels_kept
+            pruned += lat.labels_pruned
+        return (rank(_dedupe(merged), query.objective, query.top_n),
+                kept, pruned)
 
-    def _run_sp(self, query: Query, cons: Constraints,
-                cost: CostModel) -> list[PartitionConfig]:
+    def _run_sp(self, query: Query, cons: Constraints, cost: CostModel
+                ) -> tuple[list[PartitionConfig], int, int]:
         """Large-space DAG solve via :class:`SPSolver` (the DAG analogue of
         ``_run_lattice``, objective handling included — the solver's label
-        vectors carry both the additive and the bottleneck components)."""
+        vectors carry both the additive and the bottleneck components).
+        Returns (configs, labels_kept, labels_pruned)."""
         if query.pipelines is None:
-            return SPSolver(cost, cons).solve(query.objective,
-                                              top_n=query.top_n)
+            solver = self._sp_for(cons, cost, query)
+            return (solver.solve(query.objective, top_n=query.top_n),
+                    solver.labels_kept, solver.labels_pruned)
         merged: list[PartitionConfig] = []
+        kept = pruned = 0
         for pcons in self._pipe_constraints(query):
-            merged.extend(SPSolver(cost, pcons).solve(query.objective,
-                                                      top_n=query.top_n))
-        return rank(_dedupe(merged), query.objective, query.top_n)
+            solver = self._sp_for(pcons, cost, query)
+            merged.extend(solver.solve(query.objective, top_n=query.top_n))
+            kept += solver.labels_kept
+            pruned += solver.labels_pruned
+        return (rank(_dedupe(merged), query.objective, query.top_n),
+                kept, pruned)
 
     def _run_exhaustive(self, query: Query, cons: Constraints,
                         cost: CostModel) -> list[PartitionConfig]:

@@ -105,14 +105,24 @@ class ElasticController:
     into the new surface.  At ``frontier_epsilon == 0`` the merge cannot
     change the (already exact) result; with ε > 0 it pins previously
     discovered exact points so a re-plan's approximate surface never
-    loses coverage on the unchanged part of the space.  Override the
-    method to grow a fully incremental frontier update behind the same
-    seam."""
+    loses coverage on the unchanged part of the space.
+
+    ``incremental=True`` (default, frontier mode only) additionally keeps
+    the solver's final **label arrays** (one :class:`LabelState` per
+    swept batch size) between re-plans and hands them back to
+    :meth:`QueryEngine.frontier_incremental` on the next membership
+    change: a departed resource invalidates only the labels whose paths
+    touched it (the DP replays its untouched prefix and re-runs from the
+    first affected block), a joined resource generates only the delta
+    paths that visit it.  Labels price link costs, so a network change
+    drops the kept states and re-plans cold; every unsound-reuse case
+    falls back to a cold solve inside the engine, keeping re-plans exact.
+    """
 
     def __init__(self, scission: Scission, model: str,
                  input_bytes: float = 150e3, query: Query | None = None,
                  graph=None, track_frontier: bool = False,
-                 warm_start: bool = True):
+                 warm_start: bool = True, incremental: bool = True):
         self.scission = scission
         self.model = model
         self.input_bytes = input_bytes
@@ -120,6 +130,10 @@ class ElasticController:
         self.graph = graph            # for incremental benchmarking on join
         self.track_frontier = track_frontier
         self.warm_start = warm_start
+        self.incremental = incremental
+        # per-batch final label arrays of the last frontier-mode re-plan;
+        # valid across membership changes only (network changes clear it)
+        self._label_states: dict = {}
         self.history: list[PlanEvent] = []
         self._replan("initial")
 
@@ -167,8 +181,17 @@ class ElasticController:
                 _dc_replace(self.query,
                             batch_sizes=(self.query.batch_size,))
             prev = self._last_frontier() if self.warm_start else None
-            front = self.scission.frontier(self.model, fq,
-                                           self.input_bytes).configs
+            if self.incremental:
+                # labels price link latency/bandwidth, so only membership
+                # changes may reuse them — a network change solves cold
+                eng = self.scission.engine(self.model, self.input_bytes)
+                held = None if reason == "network-change" \
+                    else self._label_states
+                res, self._label_states = eng.frontier_incremental(fq, held)
+                front = res.configs
+            else:
+                front = self.scission.frontier(self.model, fq,
+                                               self.input_bytes).configs
             if prev:
                 merged = {(c.segments, c.batch_size, c.replicas): c
                           for c in (*front,

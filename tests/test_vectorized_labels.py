@@ -1,0 +1,235 @@
+"""Vectorised label-set kernels vs the scalar reference, and incremental
+re-plan exactness.
+
+The kernels in ``repro.core.lattice.labelset`` are the hot inner loops of
+every lattice DP, so their keep semantics are pinned label-for-label
+against :func:`nondominated_rows_scalar` — the unvectorised
+specification — over randomized arrays with duplicates, ties, the ε > 0
+archive path, and sizes past the pairwise/sweep crossover.  A seeded
+sweep always runs; hypothesis (when installed) amplifies it.
+
+The second half pins :meth:`QueryEngine.frontier_incremental`: warm
+re-plans (resume after a resource loss, extend after a join, replay at
+unchanged membership) must return exactly the cold frontier.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, QueryEngine, objective_vector
+from repro.core.lattice.labelset import (_PAIRWISE_MAX, grouped_nondominated,
+                                         grouped_topk, nondominated_rows,
+                                         nondominated_rows_scalar)
+import repro.core.query as query_mod
+
+from test_frontier_exact import _grid_space
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # degrade to the deterministic sweeps only
+    HAVE_HYPOTHESIS = False
+
+_vec = objective_vector
+
+
+def _random_labels(rng, n=None, m=None, grid=8):
+    """Label arrays drawn from a coarse dyadic grid so exact duplicates
+    and per-column ties are common — the cases where dominance pruning
+    semantics (first-occurrence collapse, lexicographic ε archive) can
+    silently diverge between implementations."""
+    n = int(rng.integers(0, 40)) if n is None else n
+    m = int(rng.integers(2, 6)) if m is None else m
+    return rng.integers(0, grid, size=(n, m)).astype(np.float64) / grid
+
+
+class TestNondominatedRows:
+    """nondominated_rows == nondominated_rows_scalar, index for index."""
+
+    def test_seeded_sweep_exact(self):
+        for seed in range(200):
+            rng = np.random.default_rng(seed)
+            pts = _random_labels(rng)
+            got = nondominated_rows(pts)
+            want = nondominated_rows_scalar(pts)
+            assert np.array_equal(got, want), (seed, pts)
+
+    def test_seeded_sweep_epsilon(self):
+        for seed in range(200):
+            rng = np.random.default_rng(1000 + seed)
+            pts = _random_labels(rng) + 1.0 / 16   # ε is multiplicative
+            eps = float(rng.choice([0.05, 0.25, 1.0]))
+            got = nondominated_rows(pts, eps)
+            want = nondominated_rows_scalar(pts, eps)
+            assert np.array_equal(got, want), (seed, eps, pts)
+
+    def test_past_pairwise_crossover(self):
+        # > _PAIRWISE_MAX unique rows exercises the chunked sweep path
+        for seed, eps in ((0, 0.0), (1, 0.0), (2, 0.1)):
+            rng = np.random.default_rng(seed)
+            pts = _random_labels(rng, n=_PAIRWISE_MAX + 300, m=3,
+                                 grid=64) + 1.0 / 64
+            assert len(np.unique(pts, axis=0)) > _PAIRWISE_MAX
+            assert np.array_equal(nondominated_rows(pts, eps),
+                                  nondominated_rows_scalar(pts, eps))
+
+    def test_degenerate_shapes(self):
+        empty = np.empty((0, 3))
+        assert np.array_equal(nondominated_rows(empty), np.arange(0))
+        one = np.array([[1.0, 2.0]])
+        assert np.array_equal(nondominated_rows(one), [0])
+        dup = np.array([[1.0, 2.0], [1.0, 2.0]])
+        assert np.array_equal(nondominated_rows(dup), [0])
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=300, deadline=None)
+        @given(st.integers(0, 2 ** 32 - 1), st.floats(0.0, 2.0))
+        def test_hypothesis_amplifier(self, seed, eps):
+            rng = np.random.default_rng(seed)
+            pts = _random_labels(rng) + 1.0 / 16
+            assert np.array_equal(nondominated_rows(pts, eps),
+                                  nondominated_rows_scalar(pts, eps))
+
+
+class TestGroupedKernels:
+    """Fused grouped kernels == one scalar-reference call per group."""
+
+    @staticmethod
+    def _grouped_scalar(pts, keys, eps):
+        out = []
+        for k in np.unique(keys):
+            idx = np.flatnonzero(keys == k)
+            out.append(idx[nondominated_rows_scalar(pts[idx], eps)])
+        return np.sort(np.concatenate(out)) if out else np.arange(0)
+
+    def test_grouped_nondominated_sweep(self):
+        for seed in range(150):
+            rng = np.random.default_rng(seed)
+            pts = _random_labels(rng) + 1.0 / 16
+            keys = rng.integers(0, 4, size=len(pts))
+            eps = float(rng.choice([0.0, 0.0, 0.1]))  # mostly fused path
+            got = grouped_nondominated(pts, keys, eps)
+            want = self._grouped_scalar(pts, keys, eps)
+            assert np.array_equal(got, want), (seed, eps)
+
+    def test_grouped_key_embedding_past_crossover(self):
+        # ε == 0 with many rows takes the (key, -key) embedding through
+        # nondominated_rows' sweep path; groups must still be watertight
+        rng = np.random.default_rng(7)
+        pts = _random_labels(rng, n=_PAIRWISE_MAX + 200, m=3, grid=64)
+        keys = rng.integers(0, 6, size=len(pts))
+        assert np.array_equal(grouped_nondominated(pts, keys, 0.0),
+                              self._grouped_scalar(pts, keys, 0.0))
+
+    def test_grouped_topk_sweep(self):
+        for seed in range(150):
+            rng = np.random.default_rng(seed)
+            n = int(rng.integers(0, 50))
+            keys = rng.integers(0, 5, size=n)
+            scores = rng.integers(0, 6, size=n).astype(np.float64)
+            k = int(rng.integers(1, 5))
+            want = []
+            for g in np.unique(keys):
+                idx = np.flatnonzero(keys == g)
+                # stable: ties on the score keep the earliest rows
+                want.extend(idx[np.argsort(scores[idx], kind="stable")][:k])
+            assert np.array_equal(grouped_topk(keys, scores, k),
+                                  np.sort(np.asarray(want, dtype=np.intp)))
+
+
+def _keyset(res):
+    return {(c.segments, c.batch_size, c.replicas) for c in res.configs}
+
+
+def _engine(n_cloud=2):
+    return _grid_space(n_blocks=6, n_edge=2, n_cloud=n_cloud,
+                       batches=(1, 2))
+
+
+def _without(eng, name):
+    res = [r for r in eng.resources if r.name != name]
+    return QueryEngine(eng.db, res, eng.network, source=eng.source,
+                       input_bytes=eng.input_bytes)
+
+
+class TestFrontierIncremental:
+    """Warm re-plans return exactly the cold frontier."""
+
+    def test_steady_state_replay(self):
+        eng = _engine()
+        q = Query()
+        cold, states = eng.frontier_incremental(q)
+        assert states                      # one LabelState per swept batch
+        warm, states2 = eng.frontier_incremental(q, states)
+        assert _keyset(warm) == _keyset(cold)
+        assert warm.strategy == "lattice"
+        assert set(states2) == set(states)
+
+    def test_resume_after_resource_loss(self):
+        eng = _engine()
+        _, states = eng.frontier_incremental(Query())
+        eng2 = _without(eng, "cloud1")
+        cold, _ = eng2.frontier_incremental(Query())
+        warm, _ = eng2.frontier_incremental(Query(), states)
+        assert _keyset(warm) == _keyset(cold)
+
+    def test_resume_after_barred_resource_loss(self):
+        # the high-reuse case: the departed resource was barred from early
+        # blocks by a link budget, so most of the label prefix replays
+        ob = np.asarray(_engine().cost.out_bytes, dtype=float)
+        lim = float(np.sort(ob)[1])
+        eng = _engine()
+        others = [r.name for r in eng.resources if r.name != "cloud1"]
+        q = Query(max_link_bytes={(o, "cloud1"): lim for o in others})
+        _, states = eng.frontier_incremental(q)
+        eng2 = _without(eng, "cloud1")
+        cold, _ = eng2.frontier_incremental(q)
+        warm, _ = eng2.frontier_incremental(q, states)
+        assert _keyset(warm) == _keyset(cold)
+
+    def test_extend_after_resource_join(self):
+        full = _engine(n_cloud=2)          # cloud1 is last in the axis
+        small = _without(full, "cloud1")
+        _, states = small.frontier_incremental(Query())
+        cold, _ = full.frontier_incremental(Query())
+        warm, _ = full.frontier_incremental(Query(), states)
+        assert _keyset(warm) == _keyset(cold)
+
+    def test_constrained_replay_exact(self):
+        eng = _engine()
+        q = Query(must_use=("edge0",),
+                  max_resource_time={"device0": 1.0})
+        cold, states = eng.frontier_incremental(q)
+        warm, _ = eng.frontier_incremental(q, states)
+        assert _keyset(warm) == _keyset(cold)
+        exh = eng.frontier(q, strategy="exhaustive")
+        assert {_vec(c) for c in warm.configs} == \
+               {_vec(c) for c in exh.configs}
+
+
+class TestSolveTelemetry:
+    """run()/frontier() expose pure solve time and label statistics."""
+
+    def test_lattice_run_populates_labels(self):
+        eng = _engine()
+        old = query_mod.EXHAUSTIVE_LIMIT
+        try:
+            query_mod.EXHAUSTIVE_LIMIT = -1
+            res = eng.run(Query(top_n=1))
+        finally:
+            query_mod.EXHAUSTIVE_LIMIT = old
+        assert res.strategy == "lattice"
+        assert res.labels_kept > 0
+        assert 0.0 < res.solve_seconds <= res.query_time_s
+
+    def test_frontier_populates_labels(self):
+        eng = _engine()
+        res = eng.frontier(strategy="lattice")
+        assert res.labels_kept > 0
+        assert 0.0 < res.solve_seconds <= res.query_time_s
+        exh = eng.frontier(strategy="exhaustive")
+        assert exh.solve_seconds > 0.0
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
