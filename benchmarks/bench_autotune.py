@@ -23,8 +23,20 @@ statically rules out at least one candidate, and the gate asserts that
   unpruned sweep's (the budget is set to the unpruned winners' maximum
   footprint, so pruning only removes losers).
 
-``--out`` writes the per-kernel kept/pruned counts as a JSON artifact
-(uploaded by the CI ``lint`` job).
+It runs the analogous **tiling pruning gate** (repro.analysis.tiling): a
+sweep that includes a sublane-misaligned candidate is re-run with
+``tile_check`` enabled, and the gate asserts the misaligned candidate is
+pruned *before timing* while the winner (params and measured time) stays
+bit-identical to the unpruned sweep's.
+
+``--verify-vmem`` cross-checks the static SCN202 VMEM footprint model
+against the compiler's own memory accounting (``memory_analysis()`` /
+``cost_analysis()``) per kernel at the default block sizes, reporting the
+per-kernel deltas; in interpret mode (no Mosaic compilation — the CI
+configuration) each kernel records a clean ``skipped`` reason instead.
+
+``--out`` writes the gate reports (and the ``--verify-vmem`` table when
+requested) as a JSON artifact (uploaded by the CI ``lint`` job).
 """
 
 from __future__ import annotations
@@ -130,6 +142,120 @@ def vmem_gate(quick: bool = True) -> dict:
     return report
 
 
+def tiling_gate(quick: bool = True) -> dict:
+    """The tile-alignment pruning gate (see module docstring).
+
+    Follows the ``vmem_gate`` discipline: one tuner serves both sweeps, so
+    the gated resource selects among *cached* trial measurements and the
+    winner must come out bit-identical.  The sweep injects a
+    ``block_k=100`` candidate (100 % 8 != 0: sublane-misaligned for f32);
+    a deterministic ``measure`` hook prices each candidate at its *padded*
+    tile area, so the misaligned candidate both loses the sweep and is
+    exactly what ``tile_check`` statically removes.
+    """
+    from repro.kernels.substrate import round_up
+
+    S, H, hd = (192, 2, 32) if quick else (320, 4, 64)
+    candidates = {"flash_attention": [
+        {"block_q": 64, "block_k": 64},
+        {"block_q": 64, "block_k": 100},     # sublane-misaligned (f32)
+        {"block_q": 128, "block_k": 128}]}
+    misaligned_key = json.dumps({"block_q": 64, "block_k": 100},
+                                sort_keys=True)
+
+    def factory(params):
+        def fn(x):
+            return x
+        fn.params = dict(params)
+        return fn
+
+    def measure(fn, args):
+        p = fn.params
+        return float(round_up(p["block_q"], 8) * round_up(p["block_k"], 8))
+
+    x = jax.ShapeDtypeStruct((1, S, H, hd), jnp.float32)
+    tuner = KernelAutotuner(candidates=candidates, measure=measure,
+                            tile_check=False)
+    base = tuner.tune("flash_attention", factory, (x,), resource="cloud")
+    tuner.tile_check = True                 # gated sweep, same trial table
+    gated = tuner.tune("flash_attention", factory, (x,), resource="edge1")
+
+    return {
+        "candidates": len(candidates["flash_attention"]),
+        "measured_unpruned": len(base.trials),
+        "tile_pruned": dict(gated.tile_pruned),
+        "misaligned_measured_unpruned": misaligned_key in base.trials,
+        "misaligned_in_gated_trials": misaligned_key in gated.trials,
+        "winner_params": gated.params,
+        "winner_identical": (gated.params == base.params
+                             and gated.time_s == base.time_s),
+    }
+
+
+def verify_vmem(quick: bool = True) -> dict:
+    """``--verify-vmem``: static SCN202 footprint vs compiled memory.
+
+    For each kernel at its default block sizes, records the analyzer's
+    static VMEM footprint and — when Mosaic compilation is available —
+    the compiler's own memory accounting (``memory_analysis()`` with a
+    ``cost_analysis()`` fallback) plus the delta.  In interpret mode each
+    kernel records a ``skipped`` reason instead of failing.
+    """
+    from repro.kernels.ops import decode_attention_node
+    from repro.kernels.substrate import (DEFAULT_PARAMS, compiled_costs,
+                                         default_interpret)
+
+    S, H, hd = (192, 2, 32) if quick else (320, 4, 64)
+    interp = default_interpret()
+    cases = [
+        ("flash_attention",
+         flash_attention_node("vv-attn"),
+         jax.ShapeDtypeStruct((1, S, H, hd), jnp.float32)),
+        ("decode_attention",
+         decode_attention_node("vv-decode", cache_len=4 * S, kv_heads=H,
+                               head_dim=hd),
+         jax.ShapeDtypeStruct((1, H, hd), jnp.float32)),
+        ("ssd_scan",
+         ssd_scan_node("vv-ssd", state_dim=16),
+         jax.ShapeDtypeStruct((1, S, H, hd), jnp.float32)),
+    ]
+
+    report = {"mode": "interpret" if interp else "compiled", "kernels": {}}
+    for kernel, node, spec in cases:
+        params = dict(DEFAULT_PARAMS[kernel])
+        fp = kernel_footprint(kernel, params, [spec], node.kernel_options)
+        entry: dict = {"params": params,
+                       "static_bytes": float(fp.vmem_bytes)}
+        if interp:
+            entry["skipped"] = ("interpret mode: no compiled memory "
+                                "analysis available")
+        else:
+            try:
+                fn = node.kernel_factory(params)
+                compiled = jax.jit(fn).lower(spec).compile()
+                mem = None
+                ma = getattr(compiled, "memory_analysis", None)
+                if ma is not None:
+                    m = ma()
+                    parts = [getattr(m, f, None) for f in
+                             ("temp_size_in_bytes", "output_size_in_bytes",
+                              "argument_size_in_bytes")]
+                    if any(p is not None for p in parts):
+                        mem = float(sum(p for p in parts if p is not None))
+                if mem is None:
+                    mem = compiled_costs(compiled).get("bytes accessed")
+                if mem is None:
+                    entry["skipped"] = ("compiler exposed no memory "
+                                       "accounting on this JAX version")
+                else:
+                    entry["compiled_bytes"] = float(mem)
+                    entry["delta_bytes"] = float(mem) - float(fp.vmem_bytes)
+            except Exception as e:   # keep the artifact, note the reason
+                entry["skipped"] = f"{type(e).__name__}: {e}"
+        report["kernels"][kernel] = entry
+    return report
+
+
 def run(quick: bool = True):
     S, H, hd = (192, 2, 32) if quick else (320, 4, 64)
     resources = [
@@ -174,6 +300,17 @@ def run(quick: bool = True):
     assert gate["all_winners_identical"], \
         "VMEM gate: pruning changed a winner (or its measured time)"
 
+    tgate = tiling_gate(quick)
+    print(f"  tiling gate: {len(tgate['tile_pruned'])} misaligned "
+          f"candidate(s) statically pruned before timing, winner identical "
+          f"to unpruned sweep: {tgate['winner_identical']}")
+    assert len(tgate["tile_pruned"]) >= 1, \
+        "tiling gate: expected >= 1 statically pruned misaligned candidate"
+    assert not tgate["misaligned_in_gated_trials"], \
+        "tiling gate: a misaligned candidate was still timed"
+    assert tgate["winner_identical"], \
+        "tiling gate: pruning changed the winner (or its measured time)"
+
     rows = [("autotune/sweeps_changed_default", float(len(changed)),
              f"{len(changed)}/{len(tuner.records)}"),
             ("autotune/db_records_tuned", float(tuned_recs), tuned_recs),
@@ -183,12 +320,17 @@ def run(quick: bool = True):
              f"budget={gate['budget_bytes']:.0f}B"),
             ("autotune/vmem_winner_identical",
              float(gate["all_winners_identical"]),
-             gate["all_winners_identical"])]
+             gate["all_winners_identical"]),
+            ("autotune/tile_pruned", float(len(tgate["tile_pruned"])),
+             ";".join(sorted(tgate["tile_pruned"])) or "-"),
+            ("autotune/tile_winner_identical",
+             float(tgate["winner_identical"]), tgate["winner_identical"])]
     for rec in tuner.records.values():
         rows.append((f"autotune/{rec.kernel}@{rec.resource}",
                      rec.time_s * 1e6,
                      "->".join([str(rec.default_params), str(rec.params)])))
     run.last_gate = gate        # for --out (same idiom as bench_partitions)
+    run.last_tiling_gate = tgate
     return rows
 
 
@@ -199,15 +341,34 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="larger shapes / more runs")
     ap.add_argument("--out", default=None,
-                    help="write the gate report (kept/pruned per kernel) "
+                    help="write the gate reports (kept/pruned per kernel) "
                          "as JSON")
+    ap.add_argument("--verify-vmem", action="store_true",
+                    help="cross-check the static VMEM footprint against "
+                         "compiled memory accounting (skips cleanly in "
+                         "interpret mode)")
     args = ap.parse_args()
     rows = run(quick=not args.full)
-    gate = run.last_gate
+    report = dict(run.last_gate)
+    report["tiling_gate"] = run.last_tiling_gate
+    if args.verify_vmem:
+        vv = verify_vmem(quick=not args.full)
+        report["verify_vmem"] = vv
+        print(f"  verify-vmem ({vv['mode']}):")
+        for kernel, entry in sorted(vv["kernels"].items()):
+            if "skipped" in entry:
+                print(f"    {kernel}: static "
+                      f"{entry['static_bytes'] / 2**20:.2f}MiB "
+                      f"[skipped: {entry['skipped']}]")
+            else:
+                print(f"    {kernel}: static "
+                      f"{entry['static_bytes'] / 2**20:.2f}MiB vs compiled "
+                      f"{entry['compiled_bytes'] / 2**20:.2f}MiB "
+                      f"(delta {entry['delta_bytes'] / 2**20:+.2f}MiB)")
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump(gate, f, indent=2, sort_keys=True)
+            json.dump(report, f, indent=2, sort_keys=True)
         print(f"  wrote {args.out}")
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

@@ -4,7 +4,7 @@ Usage (the module is the entry point; ``scission-lint`` is the alias used
 throughout the docs)::
 
     PYTHONPATH=src python -m repro.analysis [--strict] [--vmem BYTES] \
-        [TARGET ...]
+        [--allow CODE ...] [TARGET ...]
 
 Targets:
 
@@ -13,12 +13,26 @@ Targets:
   (default: the TPU ~16 MiB/core budget).
 * ``graphs`` — build representative model-zoo graphs and run the graph
   IR checker with shape-chain verification.
+* ``tiling`` — static TPU tile-alignment analysis (SCN204-207) of the
+  default candidate grids at the same representative shapes.
+* ``jaxpr`` — trace every fused block of a kernel-bearing demo graph and
+  the model zoo with ``jax.make_jaxpr`` and lint the dataflow (SCN5xx:
+  f64 leakage, boundary-byte disagreement, host callbacks, sub-f32
+  kernel accumulation).
+* ``cost PATH [PATH ...]`` — cost-model soundness (SCN4xx) over each
+  JSON file following the keyword: a persisted ``BenchmarkDB``
+  (``"records"`` payload) gets the DB checks; a deployment plan
+  (``"block_times"`` payload) additionally gets the link checks and the
+  additive/minimax composition check on its constructed cost model.
 * ``path/to/plan.json`` — lint a deployment-plan file: structural plan
   diagnostics plus (when no structural error already explains it) the
   exact SCN109 joint-satisfiability sweep.
 
 With no targets, ``kernels`` and ``graphs`` both run.  ``--strict`` exits
-non-zero when any error-severity diagnostic was emitted (the CI gate).
+non-zero when any error- **or warning**-severity diagnostic survives
+``--allow`` waivers (the CI gate; ``--allow SCN309`` waives a code
+without silencing its report).  Diagnostics are deduped by (code,
+subject) before rendering and counting.
 
 Plan-file schema (see ``examples/plans/``)::
 
@@ -39,7 +53,8 @@ import json
 import sys
 from dataclasses import dataclass
 
-from .diagnostics import Diagnostic, ERROR, errors, render_report
+from .diagnostics import (Diagnostic, ERROR, WARNING, dedupe, errors,
+                          render_report)
 from .kernel_vmem import TPU_VMEM_BYTES, lint_candidates
 
 
@@ -81,6 +96,22 @@ def _lint_kernels(vmem_limit: float) -> list[Diagnostic]:
     return diags
 
 
+def _lint_tiling_target() -> list[Diagnostic]:
+    from .tiling import lint_tiling
+
+    from repro.kernels.substrate import DEFAULT_CANDIDATES
+
+    diags: list[Diagnostic] = []
+    for kernel, candidates in sorted(DEFAULT_CANDIDATES.items()):
+        args, options = _KERNEL_SHAPES.get(kernel, ((), {}))
+        kept, flagged, kdiags = lint_tiling(
+            kernel, candidates, args, options=options, subject=kernel)
+        diags.extend(kdiags)
+        print(f"  {kernel}: {len(kept)} aligned / {len(flagged)} flagged "
+              f"of {len(candidates)} candidates")
+    return diags
+
+
 def _non_sp_example():
     """A graph with a *crossed* skip (a→c and b→d crossing): deliberately
     not series-parallel, so the ``graphs`` target demonstrably exercises
@@ -118,17 +149,48 @@ def _lint_graphs() -> list[Diagnostic]:
     return diags
 
 
-def _load_plan(path: str) -> list[Diagnostic]:
+def _demo_kernel_graph():
+    """A small graph carrying both prefill kernels, for the ``jaxpr``
+    target: its blocks trace through the Pallas paths the SCN5xx checks
+    are about."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import linear_graph
+    from repro.kernels.ops import flash_attention_node, ssd_scan_node
+
+    return linear_graph(
+        "jaxpr-demo", jax.ShapeDtypeStruct((1, 128, 2, 32), jnp.float32),
+        [flash_attention_node("attn", interpret=True),
+         ssd_scan_node("ssd", state_dim=16, interpret=True)])
+
+
+def _lint_jaxpr_target() -> list[Diagnostic]:
+    from .jaxpr_lint import lint_blocks
+    from repro.core.bench import AnalyticProvider, benchmark_model
+    from repro.core.graph import fuse_blocks
+    from repro.core.resources import CLOUD_VM, Resource
+    from repro.models import cnn_zoo
+
+    diags: list[Diagnostic] = []
+    fleet = [Resource("cloud", "cloud", CLOUD_VM)]
+    for graph in (_demo_kernel_graph(), cnn_zoo.mobilenetv2()):
+        blocks = fuse_blocks(graph)
+        # an analytic DB so the SCN502 byte cross-check runs against what
+        # the cost model would actually charge
+        db = benchmark_model(graph, fleet, AnalyticProvider(), runs=1,
+                             blocks=list(blocks))
+        gdiags = lint_blocks(blocks, db=db)
+        diags.extend(gdiags)
+        print(f"  {graph.name}: {len(blocks)} block(s) traced, "
+              f"{len(gdiags)} diagnostics")
+    return diags
+
+
+def _plan_components(plan: dict, path: str):
     from repro.core.bench import BenchmarkDB, BlockBenchmark
     from repro.core.network import Link, NetworkModel
-    from repro.core.partition import CostModel
     from repro.core.query import Query
     from repro.core.resources import CLOUD_VM, Resource
-
-    from .plan_lint import explain_empty, lint_plan
-
-    with open(path) as f:
-        plan = json.load(f)
 
     resources = [
         Resource(r["name"], r["tier"], CLOUD_VM,
@@ -164,50 +226,130 @@ def _load_plan(path: str) -> list[Diagnostic]:
         min_blocks_on={k: int(v)
                        for k, v in q.get("min_blocks_on", {}).items()},
         pipelines=q.get("pipelines"))
+    return db, net, resources, query, plan["source"], float(plan["input_bytes"])
 
-    source = plan["source"]
+
+def _load_plan(path: str) -> list[Diagnostic]:
+    from repro.core.partition import CostModel
+
+    from .plan_lint import explain_empty, lint_plan
+
+    with open(path) as f:
+        plan = json.load(f)
+    db, net, resources, query, source, input_bytes = \
+        _plan_components(plan, path)
+
     diags = lint_plan(query, resources, net, db, source=source,
                       batches=[query.batch_size])
     if not errors(diags):
         cost = CostModel(db=db, resources=resources, network=net,
-                         source=source,
-                         input_bytes=float(plan["input_bytes"]),
+                         source=source, input_bytes=input_bytes,
                          batch_size=query.batch_size)
         diags.extend(explain_empty(query, query.constraints(), [cost],
                                    prior=diags))
     return diags
 
 
+def _lint_cost_file(path: str) -> list[Diagnostic]:
+    from repro.core.bench import BenchmarkDB
+
+    from .cost_lint import lint_cost, lint_cost_db
+
+    with open(path) as f:
+        payload = json.load(f)
+
+    if "records" in payload:                  # a persisted BenchmarkDB
+        db = BenchmarkDB.from_json(json.dumps(payload))
+        print(f"  {db.model}: {len(db.records)} resource(s) x "
+              f"{db.n_blocks} block(s)")
+        return lint_cost_db(db)
+
+    if "block_times" in payload:              # a deployment plan: full pass
+        from repro.core.partition import CostModel
+
+        db, net, resources, query, source, input_bytes = \
+            _plan_components(payload, path)
+        print(f"  {db.model}: {len(resources)} resource(s) x "
+              f"{db.n_blocks} block(s), {len(net.links())} link(s)")
+        cost = CostModel(db=db, resources=resources, network=net,
+                         source=source, input_bytes=input_bytes,
+                         batch_size=query.batch_size)
+        return lint_cost(db, network=net,
+                         resources=[r.name for r in resources], cost=cost)
+
+    raise ValueError(
+        f"{path}: neither a persisted BenchmarkDB ('records') nor a "
+        f"deployment plan ('block_times')")
+
+
+_KEYWORDS = {"kernels", "graphs", "tiling", "jaxpr", "cost"}
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="scission-lint",
-        description="Static analysis for Scission kernels, plans and graphs")
+        description="Static analysis for Scission kernels, plans, graphs, "
+                    "cost models and block dataflow")
     parser.add_argument("targets", nargs="*",
-                        help="'kernels', 'graphs', and/or plan JSON paths "
+                        help="'kernels', 'graphs', 'tiling', 'jaxpr', "
+                             "'cost JSON...', and/or plan JSON paths "
                              "(default: kernels graphs)")
     parser.add_argument("--strict", action="store_true",
-                        help="exit 1 when any error diagnostic is emitted")
+                        help="exit 1 when any error or warning diagnostic "
+                             "survives --allow waivers")
+    parser.add_argument("--allow", action="append", default=[],
+                        metavar="CODE",
+                        help="waive a diagnostic code from the strict "
+                             "verdict (repeatable; still reported)")
     parser.add_argument("--vmem", type=float, default=float(TPU_VMEM_BYTES),
                         help="VMEM budget in bytes for the kernels target "
                              "(default: %(default).0f)")
     args = parser.parse_args(argv)
     targets = args.targets or ["kernels", "graphs"]
+    allow = set(args.allow)
 
-    n_errors = 0
-    for target in targets:
-        print(f"== scission-lint: {target} ==")
-        if target == "kernels":
-            diags = _lint_kernels(args.vmem)
-        elif target == "graphs":
-            diags = _lint_graphs()
+    jobs: list[tuple[str, object]] = []
+    i = 0
+    while i < len(targets):
+        t = targets[i]
+        if t == "cost":
+            i += 1
+            paths = []
+            while i < len(targets) and targets[i] not in _KEYWORDS:
+                paths.append(targets[i])
+                i += 1
+            if not paths:
+                parser.error("the 'cost' target needs at least one JSON "
+                             "path after it")
+            for p in paths:
+                jobs.append((f"cost {p}", lambda p=p: _lint_cost_file(p)))
+            continue
+        if t == "kernels":
+            jobs.append(("kernels", lambda: _lint_kernels(args.vmem)))
+        elif t == "graphs":
+            jobs.append(("graphs", _lint_graphs))
+        elif t == "tiling":
+            jobs.append(("tiling", _lint_tiling_target))
+        elif t == "jaxpr":
+            jobs.append(("jaxpr", _lint_jaxpr_target))
         else:
-            diags = _load_plan(target)
+            jobs.append((t, lambda t=t: _load_plan(t)))
+        i += 1
+
+    n_errors = n_warnings = 0
+    for label, runner in jobs:
+        print(f"== scission-lint: {label} ==")
+        diags = runner()
         report = render_report(diags)
         if report:
             print(report)
-        n_errors += len(errors(diags))
-    print(f"scission-lint: {len(targets)} target(s), {n_errors} error(s)")
-    if args.strict and n_errors:
+        counted = [d for d in dedupe(diags) if d.code not in allow]
+        n_errors += sum(d.severity == ERROR for d in counted)
+        n_warnings += sum(d.severity == WARNING for d in counted)
+    waived = f", {len(allow)} code(s) waived" if allow else ""
+    print(f"scission-lint: {len(jobs)} target(s), {n_errors} error(s), "
+          f"{n_warnings} warning(s){waived}")
+    if args.strict and (n_errors or n_warnings):
         return 1
     return 0
 

@@ -1,7 +1,9 @@
 """Shared diagnostic type for the static-analysis layer (``scission-lint``).
 
-Every analyzer — the plan linter (SCN1xx), the kernel memory analyzer
-(SCN2xx) and the graph IR checker (SCN3xx) — reports findings as
+Every analyzer — the plan linter (SCN1xx), the kernel memory / tiling
+analyzers (SCN2xx), the graph IR checker (SCN3xx), the cost-model
+soundness pass (SCN4xx) and the jaxpr dataflow lint (SCN5xx) — reports
+findings as
 :class:`Diagnostic` values: a stable machine-checkable ``code``, a
 ``severity``, a human message, the ``subject`` the finding is about (a
 resource name, a kernel candidate, a graph node) and an actionable
@@ -92,6 +94,36 @@ CODES: dict[str, str] = {
     "SCN307": "benchmarked output bytes disagree with the graph's computed "
               "output bytes",
     "SCN308": "graph is untraced: shape-chain checks skipped",
+    "SCN309": "graph is not series-parallel: non-SP region linearised",
+    "SCN310": "series-parallel decomposition failed: chain fallback",
+    # -- SCN2xx (cont.): TPU tile-alignment analyzer (repro.analysis.tiling) --
+    "SCN204": "kernel candidate block shape is misaligned to the dtype's "
+              "minimum TPU tile",
+    "SCN205": "kernel candidate leaves grid-remainder padding waste",
+    "SCN206": "every candidate of a kernel sweep is tile-misaligned",
+    "SCN207": "minor (lane) dimension below the 128-lane tile: relayout "
+              "padding",
+    # -- SCN4xx: cost-model soundness (BenchmarkDB x NetworkModel vs the ----
+    # -- invariants the exact DPs assume) -----------------------------------
+    "SCN401": "non-finite or negative stage time / byte count in the "
+              "benchmark DB",
+    "SCN402": "batch profile is non-monotone: per-batch time decreases "
+              "with batch size",
+    "SCN403": "batch-profile coverage gap: resource misses batches other "
+              "resources measured",
+    "SCN404": "link model anomaly: negative latency or non-positive "
+              "bandwidth",
+    "SCN405": "asymmetric explicit link pair: a->b and b->a cost differ",
+    "SCN406": "self-link staging is costlier than the default "
+              "inter-resource link",
+    "SCN407": "cost-model composition violated: latency not additive or "
+              "bottleneck not max-composing",
+    # -- SCN5xx: jaxpr dataflow lint (traced Block.make_callable) ------------
+    "SCN501": "float64 value inside a traced block (f64 leakage)",
+    "SCN502": "traced boundary tensor disagrees with BenchmarkDB / graph "
+              "output bytes",
+    "SCN503": "host callback or non-jittable primitive inside a block",
+    "SCN504": "sub-f32 accumulation dtype on a kernel-path contraction",
 }
 
 
@@ -104,13 +136,14 @@ def has_errors(diags: list[Diagnostic]) -> bool:
 
 
 def dedupe(diags: list[Diagnostic]) -> list[Diagnostic]:
-    """Collapse repeated (code, subject, message) findings, preserving
-    order — analyzers running per operating point may re-derive the same
-    fact several times."""
-    seen: set[tuple[str, str, str]] = set()
+    """Collapse repeated (code, subject) findings, preserving order — a
+    frontier sweep re-derives the same fact once per operating point with
+    the batch size baked into the message, so keying on the message would
+    let one clamp render dozens of times.  The first message wins."""
+    seen: set[tuple[str, str]] = set()
     out = []
     for d in diags:
-        k = (d.code, d.subject, d.message)
+        k = (d.code, d.subject)
         if k not in seen:
             seen.add(k)
             out.append(d)

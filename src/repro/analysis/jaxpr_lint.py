@@ -1,0 +1,196 @@
+"""Jaxpr dataflow lint of fused blocks (SCN5xx).
+
+Each :class:`repro.core.graph.Block` is a standalone sub-model — the
+entity Scission benchmarks, ships across a cut and serves.  This pass
+traces every block's ``make_callable`` with :func:`jax.make_jaxpr` /
+:func:`jax.eval_shape` on *abstract* inputs (the block's ``in_specs``)
+and lints the resulting dataflow:
+
+* **SCN501** — float64 values inside the traced block.  f64 leakage
+  doubles VMEM/transfer per element and silently falls back to slow
+  emulation on TPU; every measured time then describes a program the
+  deployment never runs.
+* **SCN502** — the traced boundary tensor (shape x dtype of the block's
+  output) disagrees with the byte count the cost model charges per cut
+  edge (``BenchmarkDB.output_bytes`` / the graph's ``out_spec``).
+* **SCN503** — host callbacks (``pure_callback``, ``io_callback``,
+  ``debug_callback``, ...) or primitives that fail abstract tracing: a
+  host round-trip inside a block is invisible to jit wall-clock on the
+  target and breaks the "block == one device program" premise.
+* **SCN504** — contractions (``dot_general``) on a *kernel-bearing*
+  block whose output dtype is below float32: the flash/decode/SSD paths
+  accumulate in f32 scratch by design, so a bf16/f16 accumulator there
+  is a numerics regression, not mixed-precision intent.
+
+Tracing is abstract — no FLOPs run, caches and weights appear only as
+shapes — so the pass is cheap enough for CI over the whole model zoo.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from .diagnostics import Diagnostic, ERROR, WARNING
+
+# Primitives whose presence inside a block voids the measured-stage-time
+# premise (host round-trips) — matched by jaxpr primitive name.
+HOST_CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "host_callback_call", "infeed", "outfeed",
+})
+
+_SUB_F32 = {"bfloat16", "float16"}
+
+
+def _walk_jaxprs(jaxpr) -> Iterable[Any]:
+    """The jaxpr plus every sub-jaxpr reachable through eqn params
+    (scan/cond/while bodies, pallas_call kernels, custom_* rules), by
+    duck typing so no private jax modules are imported."""
+    seen: set[int] = set()
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:
+            continue
+        seen.add(id(j))
+        yield j
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                stack.extend(_extract_jaxprs(v))
+
+
+def _extract_jaxprs(v) -> list[Any]:
+    if hasattr(v, "eqns"):                       # a Jaxpr
+        return [v]
+    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):  # a ClosedJaxpr
+        return [v.jaxpr]
+    if isinstance(v, (list, tuple)):
+        out: list[Any] = []
+        for x in v:
+            out.extend(_extract_jaxprs(x))
+        return out
+    return []
+
+
+def _block_specs(block) -> list:
+    import jax
+    return [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in block.in_specs]
+
+
+def _has_kernel_node(block) -> bool:
+    return any(block.graph.nodes[i].kernel for i in block.node_ids)
+
+
+def lint_block(block, db=None, *, subject: str | None = None
+               ) -> list[Diagnostic]:
+    """SCN501-504 for one fused block (see module docstring)."""
+    import jax
+
+    subject = subject or f"block{block.index}/{block.name}"
+    diags: list[Diagnostic] = []
+    fn = block.make_callable()
+    specs = _block_specs(block)
+    try:
+        closed = jax.make_jaxpr(fn)(*specs)
+        out_aval = jax.eval_shape(fn, *specs)
+    except Exception as e:                       # noqa: BLE001 - reported
+        diags.append(Diagnostic(
+            "SCN503", ERROR,
+            f"block {block.index} ({block.name}) fails abstract tracing: "
+            f"{type(e).__name__}: {e} — it cannot be jit-compiled as a "
+            f"standalone sub-model, so it cannot be benchmarked or "
+            f"served as a stage", subject=subject,
+            hint="the block must be a pure jax function of its entry "
+                 "tensors"))
+        return diags
+
+    f64_sites: list[str] = []
+    callback_prims: list[str] = []
+    subf32_dots: list[str] = []
+    for j in _walk_jaxprs(closed.jaxpr):
+        for eqn in j.eqns:
+            prim = eqn.primitive.name
+            if prim in HOST_CALLBACK_PRIMITIVES:
+                callback_prims.append(prim)
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt is None:
+                    continue
+                if str(dt) == "float64":
+                    f64_sites.append(prim)
+                elif prim == "dot_general" and str(dt) in _SUB_F32:
+                    subf32_dots.append(str(dt))
+
+    if f64_sites:
+        uniq = sorted(set(f64_sites))
+        diags.append(Diagnostic(
+            "SCN501", WARNING,
+            f"block {block.index} ({block.name}) carries float64 values "
+            f"(produced by {', '.join(uniq)}): f64 doubles boundary/VMEM "
+            f"bytes and falls back to emulation on TPU, so measured "
+            f"times and charged cut bytes describe a different program",
+            subject=subject,
+            hint="cast to float32 (or audit jax_enable_x64 usage)"))
+
+    if callback_prims:
+        uniq = sorted(set(callback_prims))
+        diags.append(Diagnostic(
+            "SCN503", ERROR,
+            f"block {block.index} ({block.name}) contains host "
+            f"callback(s) {', '.join(uniq)}: a host round-trip inside a "
+            f"stage is not captured by device wall-clock, so the "
+            f"recorded stage time undercounts the deployed cost",
+            subject=subject,
+            hint="move the callback out of the partitioned graph (or "
+                 "drop jax.debug.* from serving paths)"))
+
+    if _has_kernel_node(block) and subf32_dots:
+        uniq = sorted(set(subf32_dots))
+        diags.append(Diagnostic(
+            "SCN504", WARNING,
+            f"block {block.index} ({block.name}) is a kernel path but "
+            f"contracts with {', '.join(uniq)} accumulation: the "
+            f"flash/decode/SSD kernels accumulate in f32 scratch by "
+            f"design — a sub-f32 accumulator here is a numerics "
+            f"regression", subject=subject,
+            hint="set preferred_element_type=jnp.float32 on the "
+                 "contraction"))
+
+    # SCN502: traced boundary tensor vs the bytes the cost model charges
+    out = jax.tree_util.tree_leaves(out_aval)
+    traced_bytes = sum(
+        int(np.prod(o.shape)) * np.dtype(o.dtype).itemsize for o in out)
+    declared = block.out_spec
+    declared_bytes = (int(np.prod(declared.shape))
+                      * np.dtype(declared.dtype).itemsize)
+    charged = declared_bytes
+    source = "graph out_spec"
+    if db is not None:
+        try:
+            charged = int(db.output_bytes(block.index))
+            source = "BenchmarkDB.output_bytes"
+        except (KeyError, IndexError):
+            pass
+    if traced_bytes != charged:
+        dt = ", ".join(sorted({str(o.dtype) for o in out}))
+        diags.append(Diagnostic(
+            "SCN502", WARNING,
+            f"block {block.index} ({block.name}) traces to "
+            f"{traced_bytes} boundary bytes (dtype {dt}) but {source} "
+            f"charges {charged} bytes per cut edge — every hop cost in "
+            f"the DP prices the wrong transfer", subject=subject,
+            hint="re-trace the graph / re-benchmark so out_spec and the "
+                 "DB agree with the real boundary tensor"))
+    return diags
+
+
+def lint_blocks(blocks: Sequence, db=None) -> list[Diagnostic]:
+    """SCN5xx over a fused block list (the unit ``benchmark_model``
+    measures and the lattices cut between)."""
+    diags: list[Diagnostic] = []
+    for block in blocks:
+        diags.extend(lint_block(block, db=db))
+    return diags

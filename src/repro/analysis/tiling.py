@@ -1,0 +1,244 @@
+"""Static TPU tile-alignment analysis of kernel block-size candidates.
+
+The TPU vector unit loads VMEM in fixed (sublane, lane) tiles whose
+minimum size depends on the dtype — ``(8, 128)`` for float32, ``(16,
+128)`` for bfloat16, ``(32, 128)`` for int8/fp8 (one 32-byte sublane
+group by 128 lanes).  A Pallas block whose second-minor dimension is not
+a multiple of the sublane count is silently padded to the next tile by
+the compiler: the candidate still runs, but part of every vector op is
+wasted work and the measured time stops being representative of an
+aligned deployment.  Likewise a block size that does not divide its grid
+axis leaves a padded remainder step (the kernels pad-and-mask uneven
+lengths), so a fraction of the grid's compute is thrown away.
+
+Both properties are static functions of (kernel, candidate params,
+argument shapes) — the same inputs as the VMEM footprint model in
+:mod:`repro.analysis.kernel_vmem`, whose per-kernel ``blocks`` dicts this
+analyzer reuses so the two passes cannot drift apart.  The autotuner
+(:class:`repro.kernels.substrate.KernelAutotuner`) consumes
+:func:`misaligned_candidates` to prune misaligned candidates *before*
+compile/measure, exactly like the SCN201 VMEM pruning; the CLI's
+``tiling`` target runs the full :func:`lint_tiling` report.
+
+Codes: SCN204 (warning, misaligned block), SCN205 (info, grid-remainder
+padding waste), SCN206 (error, every candidate misaligned), SCN207
+(info, sub-128-lane minor dimension).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .diagnostics import Diagnostic, ERROR, INFO, WARNING
+from .kernel_vmem import kernel_footprint
+
+LANE = 128
+
+# Second-minor (sublane) tile requirement per dtype itemsize: one native
+# 32-byte register row — 8 f32 / 16 bf16 / 32 int8 sublanes.
+_SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
+
+
+def min_tile(dtype) -> tuple[int, int]:
+    """Minimum TPU (sublane, lane) tile for ``dtype``: (8, 128) f32,
+    (16, 128) bf16/f16, (32, 128) int8/fp8.  Wider dtypes fall back to
+    the f32 tile."""
+    itemsize = int(np.dtype(dtype).itemsize)
+    return _SUBLANE_BY_ITEMSIZE.get(itemsize, 8), LANE
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-int(n) // int(m)) * int(m)
+
+
+def _layout_dims(shape: Sequence[int]) -> tuple[int, int]:
+    """(second-minor, minor) extents of a block once unit dimensions are
+    squeezed away — the two dimensions the TPU tiles physically."""
+    dims = [int(d) for d in shape if int(d) != 1]
+    if not dims:
+        return 1, 1
+    if len(dims) == 1:
+        return 1, dims[0]
+    return dims[-2], dims[-1]
+
+
+def _grid_axes(kernel: str, params: dict, args: Sequence,
+               options: dict) -> dict[str, tuple[int, int]]:
+    """The grid axes a candidate tiles, as ``{axis: (extent, block)}`` —
+    the pad-and-mask remainder of each axis is the candidate's padding
+    waste.  Mirrors the kernels' grid arithmetic (incl. block clamping)."""
+    if kernel == "flash_attention":
+        q = args[0]
+        Sq = int(q.shape[1])
+        Sk = int(args[1].shape[1]) if len(args) >= 3 else Sq
+        return {"seq_q": (Sq, min(int(params.get("block_q", 128)), Sq)),
+                "seq_k": (Sk, min(int(params.get("block_k", 128)), Sk))}
+    if kernel == "decode_attention":
+        Smax = int(args[1].shape[1]) if len(args) >= 3 \
+            else int(options.get("cache_len", 0))
+        if Smax <= 0:
+            return {}
+        return {"cache": (Smax, min(int(params.get("block_k", 256)), Smax))}
+    if kernel == "ssd_scan":
+        S = int(args[0].shape[1])
+        return {"seq": (S, min(int(params.get("chunk", 128)), S))}
+    return {}
+
+
+@dataclass(frozen=True)
+class TileAnalysis:
+    """Static tiling report for one (kernel, candidate, shape) combination.
+
+    ``misaligned`` maps block names to ``(second_minor, required_sublane)``
+    for blocks whose second-minor extent is neither 1 nor a sublane
+    multiple; ``lane_padded`` maps block names to ``(minor, padded_to)``
+    for sub-128-lane minor dimensions (shape-inherent, not tunable);
+    ``grid_waste`` maps grid axes to the fraction of the padded grid that
+    is remainder padding."""
+
+    kernel: str
+    params: dict
+    dtype: str
+    sublane: int
+    lane: int
+    misaligned: dict[str, tuple[int, int]] = field(default_factory=dict)
+    lane_padded: dict[str, tuple[int, int]] = field(default_factory=dict)
+    grid_waste: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def is_aligned(self) -> bool:
+        return not self.misaligned
+
+    @property
+    def waste_fraction(self) -> float:
+        return max(self.grid_waste.values(), default=0.0)
+
+
+def analyze_tiling(kernel: str, params: dict, args: Sequence,
+                   options: dict | None = None) -> TileAnalysis | None:
+    """Tile-alignment analysis of one candidate, or ``None`` for a kernel
+    unknown to the footprint model (same contract as
+    :func:`repro.analysis.kernel_vmem.kernel_footprint`)."""
+    options = options or {}
+    try:
+        fp = kernel_footprint(kernel, params, args, options)
+    except Exception:
+        # args that don't match the kernel's expected rank (synthetic
+        # sweeps, partial shapes): statically unanalyzable, no opinion
+        return None
+    if fp is None:
+        return None
+    dtype = np.dtype(getattr(args[0], "dtype", np.float32))
+    sublane, lane = min_tile(dtype)
+    misaligned: dict[str, tuple[int, int]] = {}
+    lane_padded: dict[str, tuple[int, int]] = {}
+    for name, shape in sorted(fp.blocks.items()):
+        second, minor = _layout_dims(shape)
+        if second > 1 and second % sublane:
+            misaligned[name] = (second, sublane)
+        if minor % lane:
+            lane_padded[name] = (minor, _round_up(minor, lane))
+    grid_waste: dict[str, float] = {}
+    for axis, (extent, block) in _grid_axes(kernel, params or {}, args,
+                                            options).items():
+        padded = _round_up(extent, block)
+        if padded != extent:
+            grid_waste[axis] = 1.0 - extent / padded
+    return TileAnalysis(kernel, dict(params or {}), str(dtype), sublane,
+                        lane, misaligned, lane_padded, grid_waste)
+
+
+def misaligned_candidates(kernel: str, candidates: Sequence[dict],
+                          args: Sequence,
+                          options: dict | None = None) -> dict[str, str]:
+    """The autotuner's pruning predicate: map each statically
+    tile-misaligned candidate's canonical JSON key to a one-line reason.
+    Unknown kernels (no footprint model) flag nothing."""
+    flagged: dict[str, str] = {}
+    for params in candidates:
+        ta = analyze_tiling(kernel, params, args, options)
+        if ta is None or ta.is_aligned:
+            continue
+        parts = ", ".join(f"{n}: {got} % {need} != 0"
+                          for n, (got, need) in sorted(ta.misaligned.items()))
+        flagged[json.dumps(params, sort_keys=True)] = (
+            f"sublane-misaligned for {ta.dtype} "
+            f"(min tile {ta.sublane}x{ta.lane}): {parts}")
+    return flagged
+
+
+# Grid-remainder waste below this fraction is not worth a diagnostic.
+WASTE_THRESHOLD = 0.05
+
+
+def lint_tiling(kernel: str, candidates: Sequence[dict], args: Sequence,
+                *, options: dict | None = None,
+                subject: str = "") -> tuple[list[dict], dict[str, str],
+                                            list[Diagnostic]]:
+    """Split a candidate sweep into (aligned, flagged, diagnostics) — the
+    tiling twin of :func:`repro.analysis.kernel_vmem.lint_candidates`.
+
+    ``flagged`` maps the candidate's canonical JSON key to the misalignment
+    reason.  SCN204 (warning) per misaligned candidate, SCN205 (info) per
+    candidate whose grid remainder pads away more than
+    :data:`WASTE_THRESHOLD` of the work, SCN206 (error) when no candidate
+    is aligned, SCN207 (info, once per sweep) for shape-inherent
+    sub-128-lane minor dimensions.
+    """
+    subject = subject or kernel
+    diags: list[Diagnostic] = []
+    kept: list[dict] = []
+    flagged: dict[str, str] = {}
+    lane_reported = False
+    for params in candidates:
+        ta = analyze_tiling(kernel, params, args, options)
+        if ta is None:
+            kept.append(params)
+            continue
+        if ta.is_aligned:
+            kept.append(params)
+        else:
+            key = json.dumps(params, sort_keys=True)
+            parts = ", ".join(
+                f"{n} second-minor {got} not a multiple of {need}"
+                for n, (got, need) in sorted(ta.misaligned.items()))
+            flagged[key] = parts
+            diags.append(Diagnostic(
+                "SCN204", WARNING,
+                f"candidate {params} is misaligned to the {ta.dtype} "
+                f"minimum tile {ta.sublane}x{ta.lane}: {parts}; the "
+                f"compiler pads every block and the measured time stops "
+                f"being representative", subject=subject,
+                hint=f"use multiples of {ta.sublane} for tiled block "
+                     f"dimensions"))
+        if ta.waste_fraction > WASTE_THRESHOLD:
+            worst = max(ta.grid_waste, key=ta.grid_waste.get)
+            diags.append(Diagnostic(
+                "SCN205", INFO,
+                f"candidate {params} pads {ta.waste_fraction:.0%} of the "
+                f"{worst!r} grid axis away as remainder (pad-and-mask "
+                f"steps compute masked-out work)", subject=subject,
+                hint="prefer block sizes dividing the sequence length"))
+        if ta.lane_padded and not lane_reported:
+            lane_reported = True
+            parts = ", ".join(f"{n}: {got} -> {pad}"
+                              for n, (got, pad) in
+                              sorted(ta.lane_padded.items()))
+            diags.append(Diagnostic(
+                "SCN207", INFO,
+                f"minor dimensions below the {LANE}-lane tile are "
+                f"relayout-padded: {parts}", subject=subject,
+                hint="shape-inherent (head/state dim), not tunable per "
+                     "candidate"))
+    if candidates and not kept and flagged:
+        diags.append(Diagnostic(
+            "SCN206", ERROR,
+            f"every candidate of {kernel!r} is tile-misaligned for "
+            f"{np.dtype(getattr(args[0], 'dtype', np.float32))!s} inputs",
+            subject=subject,
+            hint="add sublane-multiple block sizes to the sweep"))
+    return kept, flagged, diags

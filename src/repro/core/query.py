@@ -201,6 +201,14 @@ class QueryEngine:
         # stays constructed eagerly as the legacy `.cost` view
         self._costs: dict[tuple, CostModel] = {}
         self.cost = self._cost_for()
+        # cost-model soundness lint (repro.analysis.cost_lint), run once at
+        # construction: SCN4xx findings describe premises the exact DPs
+        # assume about this DB / network / cost model, so they hold for (and
+        # are attached to) every result this engine answers
+        from ..analysis.cost_lint import lint_cost
+        self._cost_diags = lint_cost(
+            db, network=network, resources=[r.name for r in resources],
+            cost=self.cost)
         self._exhaustive_cache: dict[tuple, list[PartitionConfig]] = {}
         self._restricted_cache: dict[tuple, list[PartitionConfig]] = {}
         # batch-independent solve structure (ChainPlan) per constraint
@@ -546,9 +554,10 @@ class QueryEngine:
         from ..analysis.diagnostics import dedupe
         from ..analysis.plan_lint import explain_empty, lint_plan
 
-        diags = lint_plan(query, self.resources, self.network, self.db,
-                          source=self.source, batches=batches,
-                          check_top_n=check_top_n)
+        diags = list(self._cost_diags)
+        diags += lint_plan(query, self.resources, self.network, self.db,
+                           source=self.source, batches=batches,
+                           check_top_n=check_top_n)
         if hasattr(self.db, "drain_diagnostics"):
             diags.extend(self.db.drain_diagnostics())
         if not result.configs:

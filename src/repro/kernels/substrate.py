@@ -197,6 +197,9 @@ class TuneRecord:
     # json(params) -> computed footprint in bytes (empty when unconstrained)
     pruned: dict[str, float] = field(default_factory=dict)
     vmem_limit: float | None = None   # the budget the sweep ran under
+    # candidates statically pruned by the TPU tiling analyzer before
+    # timing: json(params) -> misalignment reason (repro.analysis.tiling)
+    tile_pruned: dict[str, str] = field(default_factory=dict)
 
     @property
     def changed_default(self) -> bool:
@@ -236,7 +239,8 @@ class KernelAutotuner:
     def __init__(self, candidates: dict[str, list[dict[str, int]]] | None = None,
                  runs: int = 2,
                  measure: Callable[[Callable, tuple], float] | None = None,
-                 vmem_limits: dict[str, float] | None = None):
+                 vmem_limits: dict[str, float] | None = None,
+                 tile_check: bool = True):
         self.candidates = dict(DEFAULT_CANDIDATES)
         if candidates:
             self.candidates.update(candidates)
@@ -251,6 +255,10 @@ class KernelAutotuner:
         # footprint (repro.analysis.kernel_vmem) exceeds the tuned
         # resource's budget are pruned before timing.
         self.vmem_limits: dict[str, float] = dict(vmem_limits or {})
+        # Static TPU tile-alignment pruning (repro.analysis.tiling):
+        # sublane-misaligned candidates are dropped before compile/measure
+        # unless that would empty the sweep.
+        self.tile_check = tile_check
 
     def register_resources(self, resources) -> None:
         """Adopt ``Resource.vmem_bytes`` budgets from a testbed (called by
@@ -296,7 +304,10 @@ class KernelAutotuner:
         candidates whose static footprint exceeds it are pruned *before*
         timing (``TuneRecord.pruned`` records them) and the winner is the
         fastest *admissible* candidate — so a shared trial table measured
-        under one budget serves stricter budgets without re-timing.
+        under one budget serves stricter budgets without re-timing.  With
+        ``tile_check`` (the default), sublane-misaligned candidates are
+        likewise pruned statically (``TuneRecord.tile_pruned`` records the
+        reason) unless no aligned candidate would remain.
         """
         defaults = dict(defaults or DEFAULT_PARAMS.get(kernel, {}))
         shape_key = shape_key or _shape_key(
@@ -330,6 +341,18 @@ class KernelAutotuner:
                     f"exceeds the {budget / 2**20:.2f}MiB VMEM budget of "
                     f"resource {resource!r}: {sizes}")
 
+        tile_pruned: dict[str, str] = {}
+        if self.tile_check and kept:
+            from ..analysis.tiling import misaligned_candidates
+            flagged = misaligned_candidates(kernel, kept, args, options)
+            aligned = [p for p in kept
+                       if json.dumps(p, sort_keys=True) not in flagged]
+            # static analysis narrows a sweep but never empties it: with no
+            # aligned candidate left, measure the flagged ones anyway
+            if aligned and flagged:
+                kept = aligned
+                tile_pruned = flagged
+
         trials = self._trials.setdefault((kernel, shape_key), {})
         failures: dict[str, str] = {}
         for params in kept:
@@ -358,7 +381,8 @@ class KernelAutotuner:
                          params=best, time_s=admissible[best_key],
                          default_params=defaults,
                          default_time_s=admissible.get(dkey, float("nan")),
-                         trials=admissible, pruned=pruned, vmem_limit=budget)
+                         trials=admissible, pruned=pruned, vmem_limit=budget,
+                         tile_pruned=tile_pruned)
         self.records[key] = rec
         return rec
 
@@ -431,3 +455,72 @@ class KernelAutotuner:
             rec = TuneRecord(**d)
             tuner.records[(rec.kernel, rec.shape_key, rec.resource)] = rec
         return tuner
+
+
+# ---------------------------------------------------------------------------
+# serving-time tuned-params registry
+# ---------------------------------------------------------------------------
+# A tuned BenchmarkDB documents the block sizes its timings were measured
+# with (``BlockBenchmark.tuned_params``).  Adopting it here makes those
+# winners the process-wide serving defaults, so model-zoo layers
+# (``models/layers.py`` attention, ``models/ssm.py`` SSD) run the same
+# kernel configuration the cost model priced — not just the benchmark
+# graphs built from ``kernels/ops.py``.
+
+_SERVING_PARAMS: dict[str, dict[str, int]] = {}
+
+
+def kernel_for_params(params: dict) -> str | None:
+    """Map a tuned-params dict to the kernel it configures by exact
+    parameter-name match ({block_q, block_k} -> flash_attention, ...).
+    ``BlockBenchmark.tuned_params`` is keyed by node name, not kernel, so
+    adoption needs this reverse lookup."""
+    keys = frozenset(params)
+    for kernel, defaults in DEFAULT_PARAMS.items():
+        if keys == frozenset(defaults):
+            return kernel
+    return None
+
+
+def adopt_tuned_params(db, *, dtype="float32") -> dict[str, dict[str, int]]:
+    """Adopt a BenchmarkDB's tuned winners as serving defaults.
+
+    Walks every record's ``tuned_params`` in deterministic order (sorted
+    resources, blocks in order, sorted node names; later entries win),
+    validates each candidate against the static tile-alignment analyzer
+    for ``dtype`` — a misaligned winner is *rejected*, the lint-validated
+    discipline — and installs the survivors.  Returns the adopted
+    ``{kernel: params}`` mapping."""
+    import numpy as np
+
+    from ..analysis.tiling import min_tile
+
+    sublane, _ = min_tile(np.dtype(dtype))
+    adopted: dict[str, dict[str, int]] = {}
+    records = getattr(db, "records", {})
+    for rname in sorted(records):
+        for rec in records[rname]:
+            tuned = getattr(rec, "tuned_params", None) or {}
+            for node in sorted(tuned):
+                params = dict(tuned[node])
+                kernel = kernel_for_params(params)
+                if kernel is None:
+                    continue
+                values_ok = all(
+                    isinstance(v, int) and v > 0 and v % sublane == 0
+                    for v in params.values())
+                if values_ok:
+                    adopted[kernel] = params
+    _SERVING_PARAMS.update(adopted)
+    return adopted
+
+
+def serving_param(kernel: str, name: str, fallback: int) -> int:
+    """The adopted tuned value of ``kernel``'s ``name`` parameter, or
+    ``fallback`` when no tuned DB has been adopted."""
+    return int(_SERVING_PARAMS.get(kernel, {}).get(name, fallback))
+
+
+def clear_tuned_params() -> None:
+    """Drop adopted serving defaults (tests / model switches)."""
+    _SERVING_PARAMS.clear()

@@ -190,18 +190,27 @@ def _attn_mask(q_pos, k_pos, *, causal: bool, window: int | None,
 
 
 def sdpa(q, k, v, *, q_pos, k_pos, causal=True, window=None, softcap=None,
-         k_len_valid=None, q_chunk: int = 512):
+         k_len_valid=None, q_chunk: int | None = None):
     """Scaled dot-product attention with GQA.
 
     q: (B, Sq, H, hd) ; k, v: (B, Sk, Hk, hd).  Chunked over Sq so the score
     matrix never exceeds (B, H, q_chunk, Sk) — required for 32k prefill.
     Softmax in fp32.
 
+    ``q_chunk=None`` (the default) resolves to the autotuned
+    ``flash_attention`` ``block_q`` winner when a tuned BenchmarkDB has
+    been adopted (``kernels/substrate.adopt_tuned_params``) — the serving
+    path then chunks at the same granularity the cost model priced — and
+    to 512 otherwise.
+
     GQA is handled by repeating K/V to H heads: the repeated dim then shards
     cleanly over the TP axis, whereas a grouped (Hk, G) einsum forces XLA
     into involuntary resharding (observed: replicated (B,Hk,G,C,Sk) score
     tensors blowing past HBM on starcoder2/internvl2 — EXPERIMENTS.md §Perf).
     """
+    if q_chunk is None:
+        from repro.kernels.substrate import serving_param
+        q_chunk = serving_param("flash_attention", "block_q", 512)
     B, Sq, H, hd = q.shape
     Hk = k.shape[2]
     G = H // Hk
@@ -248,7 +257,7 @@ def sdpa(q, k, v, *, q_pos, k_pos, causal=True, window=None, softcap=None,
 
 def attention(p, x, *, positions, rope_theta=10000.0, causal=True,
               window=None, softcap=None, kv_cache=None, cache_len=None,
-              use_rope=True, q_chunk=512, query_pre_attn_scalar=None):
+              use_rope=True, q_chunk=None, query_pre_attn_scalar=None):
     """Full attention sub-layer: qkv proj -> rope -> sdpa -> out proj.
 
     ``kv_cache``: None (training/prefill over x itself) or dict with

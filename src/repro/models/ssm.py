@@ -27,7 +27,7 @@ from .layers import Pm, rmsnorm, rmsnorm_spec
 # SSD core: y = SSD(x, a, b, c) with per-(position, head) scalar decay
 # ---------------------------------------------------------------------------
 
-def ssd(x, log_a, b, c, *, chunk: int = 128, initial_state=None,
+def ssd(x, log_a, b, c, *, chunk: int | None = None, initial_state=None,
         unroll: bool = False):
     """Chunked state-space duality scan.
 
@@ -37,7 +37,15 @@ def ssd(x, log_a, b, c, *, chunk: int = 128, initial_state=None,
     c:      (B, S, Hb, N)   head-shared maps (Mamba-2 ngroups=1 — kept
                             un-broadcast so the scan xs stay O(B·S·N))
     returns (y: (B, S, H, P), final_state: (B, H, N, P))
+
+    ``chunk=None`` (the default) resolves to the autotuned ``ssd_scan``
+    ``chunk`` winner when a tuned BenchmarkDB has been adopted
+    (``kernels/substrate.adopt_tuned_params``), and to 128 otherwise;
+    model configs that pin ``ssm_chunk`` keep passing it explicitly.
     """
+    if chunk is None:
+        from repro.kernels.substrate import serving_param
+        chunk = serving_param("ssd_scan", "chunk", 128)
     B, S, H, P = x.shape
     Hb, N = b.shape[-2], b.shape[-1]
     shared = Hb == 1

@@ -67,7 +67,7 @@ class TestDiagnostic:
     def test_all_emitted_codes_are_documented(self):
         assert all(len(c) == 6 and c.startswith("SCN") for c in CODES)
         # one block per analyzer family
-        assert {c[3] for c in CODES} == {"1", "2", "3"}
+        assert {c[3] for c in CODES} == {"1", "2", "3", "4", "5"}
 
 
 # ---------------------------------------------------------------------------
