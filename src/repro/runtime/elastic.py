@@ -135,7 +135,17 @@ class ElasticController:
         # valid across membership changes only (network changes clear it)
         self._label_states: dict = {}
         self.history: list[PlanEvent] = []
+        self._listeners: list = []
         self._replan("initial")
+
+    def add_listener(self, fn) -> None:
+        """Register a callable invoked with every :class:`PlanEvent` this
+        controller produces from now on (e.g. a serving
+        :meth:`~repro.serving.router.Router.on_plan`, which swaps its
+        operating point live when the plan changes).  Listeners do not see
+        plans that predate registration — push ``controller.current``
+        yourself if the subscriber needs the standing plan."""
+        self._listeners.append(fn)
 
     @property
     def current(self) -> PartitionConfig:
@@ -216,6 +226,8 @@ class ElasticController:
                        plan_time_s=time.perf_counter() - t0,
                        config=config, frontier=front)
         self.history.append(ev)
+        for fn in self._listeners:
+            fn(ev)
         return ev
 
     def last_frontier_shift(self) -> dict | None:

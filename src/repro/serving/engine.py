@@ -1,10 +1,22 @@
 """Batched serving engine: continuous-batching decode loop over the
 prefill/decode step functions, with Scission-placed stages.
 
+This module is the compatibility surface of the ``repro.serving`` package
+(the old monolithic engine split into layers, the same way
+``core/partition.py`` became ``core/lattice/``): :class:`Request` lives in
+:mod:`repro.serving.requests`, :class:`KVCachePool` and the prompt-bucket
+machinery in :mod:`repro.serving.queues`, :class:`ServingStats` in
+:mod:`repro.serving.metrics`, and :func:`simulate_pipeline_throughput` in
+:mod:`repro.serving.sim` — all re-exported here, so
+``from repro.serving.engine import ServingEngine, ServingStats,
+simulate_pipeline_throughput`` keeps working unchanged.
+
 The engine owns:
 * a :class:`KVCachePool` (slot-per-sequence paging at sequence granularity),
 * a request queue with admission up to the batch width,
-* the jitted prefill/decode steps (one compile per padded prompt bucket).
+* the jitted prefill/decode steps — same-tick admissions share **one**
+  prefill over a padded prompt bucket (compiles bounded by the fixed
+  bucket set), instead of one jit call + fresh batch-1 cache per request.
 
 On a cloud-edge deployment the *placement* of the two phases comes from the
 Scission query engine (e.g. prefill on the pod, decode on the regional
@@ -14,11 +26,7 @@ runs single-host but the phase boundary and cache handoff are the same.
 
 from __future__ import annotations
 
-import math
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,151 +35,21 @@ import numpy as np
 from repro.core.partition import PartitionConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
 
+from .metrics import ServingStats, mean, percentile
+from .queues import KVCachePool, PROMPT_BUCKETS, bucket_for
+from .requests import Request
+from .sim import simulate_pipeline_throughput
 
-@dataclass
-class ServingStats:
-    """Measured throughput of one :meth:`ServingEngine.run` — the observed
-    counterpart of :attr:`PartitionConfig.throughput_rps`.
+__all__ = ["KVCachePool", "Request", "ServingEngine", "ServingStats",
+           "simulate_pipeline_throughput"]
 
-    ``wall_s`` is the full wall-clock of the run, so the *first* run on an
-    engine includes jit compilation of the prefill/decode steps; compare
-    against predictions only on a warmed engine (or after a throwaway run).
-    """
-
-    requests: int = 0
-    tokens: int = 0
-    wall_s: float = 0.0
-
-    @property
-    def requests_per_s(self) -> float:
-        return self.requests / self.wall_s if self.wall_s > 0 else 0.0
-
-    @property
-    def tokens_per_s(self) -> float:
-        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
-
-
-def simulate_pipeline_throughput(config: PartitionConfig,
-                                 n_requests: int = 128) -> float:
-    """Steady-state request rate of a partition under pipelined serving.
-
-    Discrete-event simulation with the classic pipeline recurrence — the
-    unit in flight is one *batch* of ``config.batch_size`` requests, and a
-    compute stage with ``replicas[k]`` copies round-robins batches over its
-    servers: batch ``i`` enters stage ``s`` when the previous stage has
-    produced it and server ``i % replicas`` has finished batch
-    ``i - replicas``:
-
-        finish[i][s] = max(finish[i][s-1], finish[i-replicas_s][s])
-                       + stage_time[s]
-
-    Stages are the input hop (if any), then compute segments interleaved
-    with inter-stage comm hops; hops are single-server (the link is the
-    server).  The measured request rate (batch rate × batch size) converges
-    to the cost model's ``1 / bottleneck_s`` prediction;
-    benchmarks/bench_partitions.py uses this to validate predicted vs.
-    simulated throughput.
-
-    Raises ``ValueError`` for ``n_requests < 2``, a config with no
-    pipeline stages — there is no steady state to measure, and the old
-    ``inf`` return silently poisoned predicted-vs-simulated comparisons —
-    or a ``replicas`` entry below 1 (a zero-replica stage serves nothing;
-    the old code would round-robin over an empty server list).
-    """
-    if n_requests < 2:
-        raise ValueError(
-            f"need at least 2 requests to measure a steady-state rate, "
-            f"got n_requests={n_requests}")
-    if any(r < 1 for r in config.replicas):
-        raise ValueError(
-            f"every replicas entry must be >= 1, got {config.replicas}")
-    batch = max(1, config.batch_size)
-    stages: list[tuple[float, int]] = []       # (per-batch time, replicas)
-    if config.input_comm_s > 0.0:
-        stages.append((config.input_comm_s, 1))
-    for k, t in enumerate(config.stage_compute_s):
-        stages.append((t, config.replica_count(k)))
-        if k < len(config.stage_comm_s):
-            stages.append((config.stage_comm_s[k], 1))
-    if not stages:
-        raise ValueError(
-            "config has no pipeline stages (no stage_compute_s/input hop); "
-            "evaluate it through CostModel.evaluate before simulating")
-    # enough batches that every replica set wraps around several times —
-    # fewer and the measured span can be zero (all in-flight batches finish
-    # simultaneously on distinct servers, no steady state yet).  The joint
-    # pattern of a replicated pipeline repeats with period lcm(replicas) in
-    # batch index, so the run must also cover whole joint periods.
-    max_reps = max(reps for _, reps in stages)
-    period = math.lcm(*(reps for _, reps in stages))
-    warm = 2 * max_reps               # fill-up: every set wraps >= twice
-    n_batches = max(4 * max_reps, 2 * (warm + period + 1),
-                    -(-n_requests // batch))
-    finish = [[0.0] * reps for _, reps in stages]
-    done: list[float] = []
-    for i in range(n_batches):
-        prev = 0.0
-        for s, (dt, reps) in enumerate(stages):
-            srv = i % reps
-            finish[s][srv] = max(prev, finish[s][srv]) + dt
-            prev = finish[s][srv]
-        done.append(prev)
-    # measure the steady-state rate over (roughly) the second half, but:
-    # start only after every replica set has wrapped at least twice, and
-    # measure a whole number of joint periods — finish times within a wrap
-    # are bursty, so a window that cuts a period mid-wrap biases the rate
-    lo = max(len(done) // 2, warm + 1)
-    whole = (len(done) - lo) // period * period
-    start = len(done) - whole
-    span = done[-1] - done[start - 1]
-    if span <= 0.0:
-        raise ValueError(
-            "steady-state span is zero (every stage time is zero?) — "
-            "cannot measure a finite pipeline rate")
-    return whole / span * batch
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # (prompt_len,) int32
-    max_new_tokens: int = 16
-    submitted_at: float = field(default_factory=time.perf_counter)
-    tokens: list[int] = field(default_factory=list)
-    done: bool = False
-    first_token_at: float | None = None
-    finished_at: float | None = None
-
-
-class KVCachePool:
-    """Fixed-width slot pool over the stacked cache pytree.
-
-    Slot i owns batch row i of every cache leaf.  Freeing a slot just
-    recycles the row (lengths are tracked per slot) — sequence-granularity
-    paging, the memory-management layer a vLLM-style block table would
-    refine further.
-    """
-
-    def __init__(self, model, width: int, max_len: int):
-        self.width = width
-        self.max_len = max_len
-        self.cache = model.init_cache(batch=width, max_len=max_len)
-        self.lengths = np.zeros(width, np.int32)
-        self.free = deque(range(width))
-        self.slot_req: dict[int, int] = {}
-
-    def acquire(self, rid: int) -> int | None:
-        if not self.free:
-            return None
-        slot = self.free.popleft()
-        self.lengths[slot] = 0
-        self.slot_req[slot] = rid
-        return slot
-
-    def release(self, slot: int) -> None:
-        self.slot_req.pop(slot, None)
-        self.lengths[slot] = 0
-        self.free.append(slot)
+# sub-layer kinds whose cache is a recurrent state rather than per-position
+# K/V: a padded prefill would fold the padding into the state irreversibly,
+# so bucketed admission auto-disables for models containing any of these
+# (attention caches are safe: positions beyond a row's length are never
+# visible — the per-row cache_len masks them, and each position is
+# overwritten by the real token before cache_len reaches it)
+RECURRENT_KINDS = frozenset({"mamba2", "mlstm", "slstm"})
 
 
 class ServingEngine:
@@ -180,11 +58,19 @@ class ServingEngine:
     :class:`PartitionConfig`, e.g. a frontier point) sets the admission
     width to the operating point's batch size, so the engine admits exactly
     the concurrency the cost model priced.  An explicit ``width`` always
-    wins."""
+    wins.
+
+    ``prompt_buckets`` controls admission batching: ``"auto"`` (default)
+    batches same-tick admissions into one padded-prompt-bucket prefill for
+    attention-cache models and falls back to exact per-request prefill for
+    recurrent-state models (see :data:`RECURRENT_KINDS`); an explicit
+    tuple forces those buckets; ``None`` forces the exact path.
+    """
 
     def __init__(self, model, params, *, width: int | None = None,
                  max_len: int = 256, eos_id: int | None = None,
-                 config: PartitionConfig | None = None):
+                 config: PartitionConfig | None = None,
+                 prompt_buckets: tuple[int, ...] | str | None = "auto"):
         if width is None:
             width = config.batch_size if config is not None else 4
         if width < 1:
@@ -199,14 +85,66 @@ class ServingEngine:
         self.pool = KVCachePool(model, width, max_len)
         self._prefill = jax.jit(make_prefill_step(model, None, None))
         self._decode = jax.jit(make_decode_step(model, None, None))
-        self.queue: deque[Request] = deque()
+        if prompt_buckets == "auto":
+            kinds = set(getattr(self.cfg, "group_kinds", ()) or ())
+            prompt_buckets = None if kinds & RECURRENT_KINDS \
+                else PROMPT_BUCKETS
+        if prompt_buckets is not None:
+            # clip to the cache length; always keep one bucket that covers
+            # the longest admissible prompt
+            prompt_buckets = tuple(sorted(
+                {b for b in prompt_buckets if b < max_len} | {max_len}))
+        self.prompt_buckets = prompt_buckets
+        # zeros scratch cache for the batched bucket prefill (prefill is
+        # functional, so one allocation serves every admission tick)
+        self._scratch = None
+        self.queue: list[Request] = []
         self.active: dict[int, Request] = {}       # slot -> request
         self._next_tok = np.zeros((width, 1), np.int32)
         self.stats = ServingStats()
 
     # -- client API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt of request {req.rid} is {len(req.prompt)} tokens; "
+                f"the engine's cache holds max_len={self.max_len} (prompt "
+                "must leave room for at least one generated token)")
         self.queue.append(req)
+
+    def warmup(self) -> "ServingEngine":
+        """Pre-compile the decode step and the prefill bucket(s) the queued
+        requests will need (the smallest bucket when the queue is empty),
+        so the next :meth:`run`'s :class:`ServingStats` measure serving,
+        not jit compilation.  Idempotent; results are discarded — no
+        engine state changes."""
+        dec = self._decode(self.params, self.pool.cache,
+                           jnp.asarray(self._next_tok),
+                           jnp.asarray(self.pool.lengths, jnp.int32))
+        jax.block_until_ready(dec[0])
+        if self.prompt_buckets is None:
+            # exact-path compiles key on prompt length; warm each distinct
+            # length present in the queue
+            lens = sorted({len(r.prompt) for r in self.queue
+                           if len(r.prompt) > 1})
+            for L in lens:
+                single = self.model.init_cache(batch=1, max_len=self.max_len)
+                out = self._prefill(self.params, single,
+                                    {"tokens": jnp.zeros((1, L), jnp.int32)})
+                jax.block_until_ready(out[0])
+            return self
+        if self.queue:
+            buckets = sorted({bucket_for(max(len(r.prompt) - 1, 1),
+                                         self.prompt_buckets)
+                              for r in self.queue if len(r.prompt) > 1})
+        else:
+            buckets = [min(self.prompt_buckets)]
+        for b in buckets:
+            out = self._prefill(self.params, self._scratch_cache(),
+                                {"tokens": jnp.zeros((self.width, b),
+                                                     jnp.int32)})
+            jax.block_until_ready(out[0])
+        return self
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         finished: list[Request] = []
@@ -217,10 +155,14 @@ class ServingEngine:
             if self.active:
                 self._decode_step(finished)
             steps += 1
+        waits = [r.queue_wait_s for r in finished
+                 if r.queue_wait_s is not None]
         self.stats = ServingStats(
             requests=len(finished),
             tokens=sum(len(r.tokens) for r in finished),
-            wall_s=time.perf_counter() - t0)
+            wall_s=time.perf_counter() - t0,
+            queue_wait_mean_s=mean(waits),
+            queue_wait_p99_s=percentile(waits, 99))
         return finished
 
     @property
@@ -229,24 +171,83 @@ class ServingEngine:
         return self.stats.requests_per_s
 
     # -- internals --------------------------------------------------------------
+    def _scratch_cache(self):
+        if self._scratch is None:
+            self._scratch = self.model.init_cache(batch=self.width,
+                                                  max_len=self.max_len)
+        return self._scratch
+
     def _admit(self) -> None:
+        batch: list[tuple[Request, int]] = []
         while self.queue and self.pool.free:
-            req = self.queue.popleft()
+            req = self.queue.pop(0)
             slot = self.pool.acquire(req.rid)
-            # prefill one sequence into its slot (single-row batch; padded
-            # prompt buckets would batch these — kept simple here)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            single = self.model.init_cache(batch=1,
-                                           max_len=self.max_len)
-            logits, single = self._prefill(self.params, single,
-                                           {"tokens": prompt})
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.tokens.append(tok)
-            req.first_token_at = time.perf_counter()
-            self._write_slot(single, slot)
-            self.pool.lengths[slot] = len(req.prompt)
-            self._next_tok[slot, 0] = tok
+            batch.append((req, slot))
+        if not batch:
+            return
+        if self.prompt_buckets is None:
+            for req, slot in batch:
+                self._admit_exact(req, slot)
+            return
+        self._admit_bucketed(batch)
+
+    def _admit_exact(self, req: Request, slot: int) -> None:
+        """Legacy per-request prefill (recurrent-state models): one jit
+        call per distinct prompt length, fresh batch-1 cache, the first
+        token taken from the prefill logits."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        single = self.model.init_cache(batch=1, max_len=self.max_len)
+        logits, single = self._prefill(self.params, single,
+                                       {"tokens": prompt})
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.tokens.append(tok)
+        req.admitted_at = time.perf_counter()
+        req.first_token_at = req.admitted_at
+        self._write_slot(single, slot)
+        self.pool.lengths[slot] = len(req.prompt)
+        self._next_tok[slot, 0] = tok
+        self.active[slot] = req
+
+    def _admit_bucketed(self, batch: list[tuple[Request, int]]) -> None:
+        """One prefill for every same-tick admission: prompts minus their
+        last token are right-padded into the smallest covering bucket
+        (fixed batch width, so compiles are bounded by the bucket count),
+        the resulting cache rows are scattered into the admitted slots,
+        and the *last* prompt token becomes each slot's first decode input
+        — the next decode step then produces the first generated token
+        from logits identical to an exact prefill's last position (causal
+        attention never sees the right padding, and the per-row cache_len
+        masks the padded cache positions until real tokens overwrite
+        them)."""
+        now = time.perf_counter()
+        pre = max(len(req.prompt) - 1 for req, _ in batch)
+        if pre > 0:
+            bucket = bucket_for(pre, self.prompt_buckets)
+            toks = np.zeros((self.width, bucket), np.int32)
+            for j, (req, _) in enumerate(batch):
+                toks[j, :len(req.prompt) - 1] = req.prompt[:-1]
+            _, cache = self._prefill(self.params, self._scratch_cache(),
+                                     {"tokens": jnp.asarray(toks)})
+            self._scatter_rows(cache, rows=list(range(len(batch))),
+                               slots=[slot for _, slot in batch])
+        for req, slot in batch:
+            req.admitted_at = now
+            self.pool.lengths[slot] = len(req.prompt) - 1
+            self._next_tok[slot, 0] = int(req.prompt[-1])
             self.active[slot] = req
+
+    def _scatter_rows(self, src_cache, rows: list[int],
+                      slots: list[int]) -> None:
+        """Copy batch rows ``rows`` of a width-batch cache into pool slots
+        ``slots`` (batch lives at axis 1 of every cache leaf, after the
+        layer-stack axis)."""
+        rows_ix = jnp.asarray(rows)
+        slots_ix = jnp.asarray(slots)
+
+        def write(dst, src):
+            return dst.at[:, slots_ix].set(src[:, rows_ix])
+
+        self.pool.cache = jax.tree.map(write, self.pool.cache, src_cache)
 
     def _write_slot(self, single_cache, slot: int) -> None:
         def write(dst, src):
@@ -265,16 +266,19 @@ class ServingEngine:
         next_tok, logits, self.pool.cache = self._decode(
             self.params, self.pool.cache, tok, cache_len)
         nxt = np.asarray(next_tok)
+        now = time.perf_counter()
         for slot, req in list(self.active.items()):
             t = int(nxt[slot, 0])
             req.tokens.append(t)
+            if req.first_token_at is None:
+                req.first_token_at = now
             self.pool.lengths[slot] += 1
             limit = (len(req.tokens) >= req.max_new_tokens
                      or (self.eos_id is not None and t == self.eos_id)
                      or self.pool.lengths[slot] >= self.max_len - 1)
             if limit:
                 req.done = True
-                req.finished_at = time.perf_counter()
+                req.finished_at = now
                 finished.append(req)
                 del self.active[slot]
                 self.pool.release(slot)
